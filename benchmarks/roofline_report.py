@@ -1,0 +1,97 @@
+"""Roofline report builder: reads experiments/dryrun/*.json and emits the
+§Roofline table (CSV rows + a markdown table written to
+experiments/roofline.md).  Single-pod cells only, per the spec; the
+multi-pod cells prove the pod axis shards and are listed in §Dry-run."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+from benchmarks.common import emit
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    cells = []
+    for p in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | dominant | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "useful FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok" or c.get("mesh") != "pod16x16":
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['dominant']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['useful_flop_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} |"
+        )
+    skips = [c for c in cells if c.get("status") == "skipped"]
+    if skips:
+        lines.append("")
+        lines.append("Skipped cells: " + "; ".join(
+            f"{c['cell']} ({c['reason']})" for c in skips
+            if "pod16x16" in c["cell"]))
+    return "\n".join(lines)
+
+
+def comparison_table(final: List[Dict], baseline: List[Dict]) -> str:
+    base = {c["cell"]: c for c in baseline if c.get("status") == "ok"}
+    lines = [
+        "| cell | frac (baseline) | frac (final) | Δ | dominant (final) |",
+        "|---|---|---|---|---|",
+    ]
+    for c in final:
+        if c.get("status") != "ok" or c.get("mesh") != "pod16x16":
+            continue
+        b = base.get(c["cell"])
+        rf = c["roofline"]["roofline_fraction"]
+        if b is None:
+            lines.append(f"| {c['cell']} | — | {rf:.4f} | — | "
+                         f"{c['roofline']['dominant']} |")
+            continue
+        bf = b["roofline"]["roofline_fraction"]
+        ratio = rf / bf if bf else float("inf")
+        lines.append(
+            f"| {c['cell']} | {bf:.4f} | {rf:.4f} | {ratio:.2f}x "
+            f"| {c['roofline']['dominant']} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    single = [c for c in ok if c.get("mesh") == "pod16x16"]
+    multi = [c for c in ok if c.get("mesh") == "pod2x16x16"]
+    emit("roofline/cells_ok", 0.0,
+         f"single={len(single)} multi={len(multi)} "
+         f"skipped={sum(1 for c in cells if c.get('status')=='skipped')} "
+         f"errors={sum(1 for c in cells if c.get('status')=='error')}")
+    for c in single:
+        r = c["roofline"]
+        emit(f"roofline/{c['arch']}/{c['shape']}", 0.0,
+             f"dominant={r['dominant']} frac={r['roofline_fraction']:.4f} "
+             f"useful={r['useful_flop_ratio']:.3f}")
+    out = pathlib.Path("experiments/roofline.md")
+    out.parent.mkdir(exist_ok=True, parents=True)
+    text = markdown_table(cells)
+    if pathlib.Path("experiments/dryrun_baseline").exists():
+        baseline = load_cells("experiments/dryrun_baseline")
+        text += "\n\n## Baseline vs optimized (single pod)\n\n"
+        text += comparison_table(cells, baseline)
+    out.write_text(text)
+    emit("roofline/report", 0.0, str(out))
+
+
+if __name__ == "__main__":
+    main()

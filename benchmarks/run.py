@@ -1,0 +1,42 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only MODULE]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "pruning_bench",      # Fig. 8/9/10 — hybrid pruning
+    "agcn_ablation",      # Table I    — C_k cost
+    "rfc_storage",        # Table III + Fig. 11 — RFC storage
+    "dyn_sched",          # Table II   — Dyn-Mult-PE sizing
+    "throughput",         # Tables IV/V — throughput & peak perf
+    "kernels_bench",      # kernel micro-benchmarks
+    "roofline_report",    # §Roofline from the dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failed = []
+    for m in mods:
+        try:
+            mod = __import__(f"benchmarks.{m}", fromlist=["main"])
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failed.append(m)
+            traceback.print_exc()
+            print(f"{m},0.0,ERROR {e!r}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

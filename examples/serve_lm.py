@@ -1,0 +1,21 @@
+"""Batched serving example: prefill + KV-cache decode across architecture
+families (dense GQA, MoE, SSM, hybrid) — the small-scale twin of the
+decode_32k / long_500k dry-run cells.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import generate
+
+ARCHS = ["smollm-360m", "qwen3-moe-30b-a3b", "xlstm-1.3b", "zamba2-7b"]
+
+
+def main():
+    for arch in ARCHS:
+        seqs, tps = generate(arch, reduced=True, batch=2, prompt_len=8,
+                             gen=24)
+        print(f"{arch:24s} {seqs.shape[1]} tokens/seq  {tps:7.1f} tok/s  "
+              f"sample={seqs[0, 8:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

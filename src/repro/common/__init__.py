@@ -1,0 +1,4 @@
+from repro.common.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.common.tree import param_count, tree_bytes
+
+__all__ = ["ModelConfig", "ShapeConfig", "TrainConfig", "param_count", "tree_bytes"]

@@ -1,0 +1,144 @@
+"""Architecture registry + per-(arch × shape) input specs.
+
+``get_config(name)`` accepts dash or underscore ids (--arch h2o-danube-1.8b).
+``input_specs(cfg, shape, ...)`` builds ShapeDtypeStruct stand-ins for every
+model input of the given shape cell — weak-type-correct, shardable, no
+device allocation — plus the matching logical-axis trees for in_shardings.
+
+Shape applicability (DESIGN.md §4):
+  * long_500k  — only sub-quadratic archs (SWA / local-global / SSM / hybrid)
+  * decode/long — not for the paper's GCN (action recognition has no
+    autoregressive decode; its inference cell is gcn_infer)
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import GCN_SHAPES, SHAPES, ModelConfig, ShapeConfig
+
+_ARCH_MODULES = [
+    "h2o_danube_1_8b",
+    "gemma3_12b",
+    "internlm2_20b",
+    "smollm_360m",
+    "whisper_small",
+    "llava_next_mistral_7b",
+    "qwen3_moe_30b_a3b",
+    "granite_moe_3b_a800m",
+    "xlstm_1_3b",
+    "zamba2_7b",
+    "agcn_2s",
+]
+
+CONFIGS: Dict[str, ModelConfig] = {}
+REDUCED: Dict[str, ModelConfig] = {}
+for _m in _ARCH_MODULES:
+    mod = importlib.import_module(f"repro.configs.{_m}")
+    CONFIGS[mod.CONFIG.name] = mod.CONFIG
+    REDUCED[mod.CONFIG.name] = mod.REDUCED
+
+ASSIGNED = [n for n in CONFIGS if n != "agcn-2s"]
+
+
+def _norm(name: str) -> str:
+    return name.replace("_", "-").replace(".", "-").lower()
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    table = REDUCED if reduced else CONFIGS
+    key = _norm(name)
+    for k, v in table.items():
+        if _norm(k) == key:
+            return v
+    raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    return (
+        cfg.family in ("ssm", "hybrid")
+        or cfg.window_size > 0
+        or cfg.local_global_ratio > 0
+    )
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(applicable, reason-if-not)."""
+    if cfg.family == "gcn":
+        if shape in GCN_SHAPES:
+            return True, ""
+        return False, "GCN model uses gcn_train/gcn_infer cells"
+    if shape not in SHAPES:
+        return False, f"unknown shape {shape}"
+    if shape == "long_500k" and not sub_quadratic(cfg):
+        return False, "pure full attention at 524k context (sub-quadratic required)"
+    return True, ""
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    pool = GCN_SHAPES if cfg.family == "gcn" else SHAPES
+    return [s for s in pool if shape_applicable(cfg, s)[0]]
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, tuple]]:
+    """Returns (shape-struct dict, logical-axis dict) for the batch inputs.
+
+    Train/prefill cells describe the full batch {tokens, labels, ...};
+    decode cells describe the per-step inputs {tokens (B,1), pos} — the KV
+    cache specs come from registry.init_cache/cache_specs.
+    """
+    shp = (GCN_SHAPES | SHAPES)[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+
+    if cfg.family == "gcn":
+        n = B * cfg.gcn_persons
+        return (
+            {"x": _sds((n, cfg.gcn_frames, cfg.gcn_joints, cfg.gcn_in_channels),
+                       jnp.float32),
+             "labels": _sds((n,), i32)},
+            {"x": ("batch", None, None, None), "labels": ("batch",)},
+        )
+
+    if shp.is_decode:
+        batch = {"tokens": _sds((B, 1), i32), "pos": _sds((), i32)}
+        axes = {"tokens": ("batch", None), "pos": ()}
+        if cfg.family == "audio":
+            batch["memory"] = _sds((B, cfg.encoder_frames, cfg.d_model),
+                                   jnp.bfloat16)
+            axes["memory"] = ("batch", None, None)
+        return batch, axes
+
+    batch = {}
+    axes = {}
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_image_tokens
+        batch["tokens"] = _sds((B, s_text), i32)
+        batch["image_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+        batch["labels"] = _sds((B, s_text), i32)
+        axes = {"tokens": ("batch", None), "image_embeds": ("batch", None, None),
+                "labels": ("batch", None)}
+    elif cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((B, S), i32)
+        batch["labels"] = _sds((B, S), i32)
+        axes = {"frames": ("batch", None, None), "tokens": ("batch", None),
+                "labels": ("batch", None)}
+    else:
+        batch["tokens"] = _sds((B, S), i32)
+        batch["labels"] = _sds((B, S), i32)
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    return batch, axes

@@ -1,0 +1,88 @@
+"""Skeleton graphs for 2s-AGCN (paper §II).
+
+Three graphs per layer & subset k:
+  A_k — static human-skeleton graph (NTU RGB+D 25-joint), split into the
+        ST-GCN spatial-configuration subsets (identity / centripetal /
+        centrifugal), symmetrically normalized.
+  B_k — learnable dense connection graph (initialised to zero, trained).
+  C_k — data-dependent self-similarity graph, eq. (1):
+        C_k = softmax(f_in^T W_theta f_in).  The paper drops C_k at
+        deployment (Table I); we implement it for the ablation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# NTU RGB+D 25-joint skeleton, 1-indexed bone list (joint, parent).
+NTU_EDGES = [
+    (1, 2), (2, 21), (3, 21), (4, 3), (5, 21), (6, 5), (7, 6), (8, 7),
+    (9, 21), (10, 9), (11, 10), (12, 11), (13, 1), (14, 13), (15, 14),
+    (16, 15), (17, 1), (18, 17), (19, 18), (20, 19), (22, 23), (23, 8),
+    (24, 25), (25, 12),
+]
+NTU_CENTER = 21  # spine joint (1-indexed)
+NUM_JOINTS = 25
+
+
+def _hop_distance(num_joints: int, edges) -> np.ndarray:
+    adj = np.eye(num_joints, dtype=np.int32)
+    for i, j in edges:
+        adj[i - 1, j - 1] = 1
+        adj[j - 1, i - 1] = 1
+    dist = np.full((num_joints, num_joints), np.inf)
+    power = np.eye(num_joints, dtype=np.int64)
+    for d in range(num_joints):
+        if d > 0:
+            power = power @ adj
+        dist[(power > 0) & np.isinf(dist)] = d
+    return dist
+
+
+def build_ntu_subsets(num_subsets: int = 3) -> np.ndarray:
+    """Return A of shape (K, V, V): identity / centripetal / centrifugal
+    subsets, each column-normalized (D^-1 A as in ST-GCN)."""
+    V = NUM_JOINTS
+    dist = _hop_distance(V, NTU_EDGES)
+    adj1 = (dist <= 1).astype(np.float64)       # self + 1-hop
+    # normalize: A_norm[i,j] = adj[i,j] / indegree(j)
+    deg = adj1.sum(0)
+    norm = adj1 / np.maximum(deg[None, :], 1)
+
+    center_d = dist[:, NTU_CENTER - 1]
+    subsets = np.zeros((num_subsets, V, V), dtype=np.float64)
+    for i in range(V):
+        for j in range(V):
+            if dist[i, j] > 1:
+                continue
+            if center_d[j] == center_d[i]:
+                subsets[0, i, j] = norm[i, j]           # root (same distance)
+            elif center_d[j] < center_d[i]:
+                subsets[1, i, j] = norm[i, j]           # centripetal
+            else:
+                subsets[2, i, j] = norm[i, j]           # centrifugal
+    return subsets.astype(np.float32)
+
+
+def static_graph(num_subsets: int = 3) -> jnp.ndarray:
+    return jnp.asarray(build_ntu_subsets(num_subsets))
+
+
+def graph_sparsity(a: np.ndarray) -> float:
+    """Fraction of zero entries — A_k is sparse, B_k is dense (paper §I)."""
+    return float((a == 0).mean())
+
+
+def similarity_graph(x: jnp.ndarray, w_theta: jnp.ndarray, w_phi: jnp.ndarray) -> jnp.ndarray:
+    """C_k = softmax(theta(x)^T phi(x)) over joints, eq. (1).
+
+    x: (N, T, V, C); w_theta/w_phi: (C, Ce).  Returns (N, V, V).
+    """
+    theta = jnp.einsum("ntvc,ce->nve", x, w_theta)   # pool T implicitly below
+    phi = jnp.einsum("ntvc,ce->nve", x, w_phi)
+    logits = jnp.einsum("nve,nwe->nvw", theta, phi) / jnp.sqrt(
+        jnp.asarray(theta.shape[-1], x.dtype)
+    )
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)

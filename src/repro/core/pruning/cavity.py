@@ -1,0 +1,95 @@
+"""Fine-grained "cavity" pruning patterns for temporal filters (paper §IV-B).
+
+A cavity pattern is a (loop, K) binary mask — ``loop`` recurring 9×1 kernels
+(the paper uses loops of 8) applied cyclically across the temporal filters of
+a block.  A zero tap means "do not sample this time offset" (Fig. 3).
+
+Balanced patterns (variant 1) keep every tap position between floor and ceil
+of the average count per loop, which is what makes the hardware (and, on TPU,
+the SIMD lanes / MXU tiles) load-balanced; variant 2 patterns are the paper's
+deliberately unbalanced baseline (Fig. 10: cav-70-2, cav-75-2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def cavity_pattern(name: str, kernel: int = 9, loop: int = 8) -> np.ndarray:
+    """Return mask of shape (loop, kernel), dtype bool.  True = kept.
+
+    ``name`` is ``cav-<percent>-<variant>`` (paper's naming, Fig. 10):
+    percent = pruned fraction of the loop×kernel grid, variant 1 balanced,
+    variant 2 unbalanced.  ``"none"``/empty keeps everything.
+    """
+    if not name or name == "none":
+        return np.ones((loop, kernel), dtype=bool)
+    parts = name.split("-")
+    if len(parts) != 3 or parts[0] != "cav":
+        raise ValueError(f"bad cavity pattern name: {name!r}")
+    percent, variant = int(parts[1]), int(parts[2])
+    total = loop * kernel
+    keep_total = total - int(round(total * percent / 100.0))
+    if variant == 1:
+        return _balanced(keep_total, kernel, loop)
+    return _unbalanced(keep_total, kernel, loop)
+
+
+def _balanced(keep_total: int, kernel: int, loop: int) -> np.ndarray:
+    """Doubly-balanced assignment: per-tap-position (column) keep counts are
+    exactly ⌊k/K⌋ or ⌈k/K⌉, and per-kernel (row) counts differ by at most 1
+    (the paper: 'every position ... evenly kept by two or three times').
+
+    Columns get exact quotas; each column then claims the rows with the
+    lowest keep-count so far (ties broken by a rotating offset so kept taps
+    spread across time offsets instead of clustering)."""
+    mask = np.zeros((loop, kernel), dtype=bool)
+    base, extra = divmod(keep_total, kernel)
+    quotas = [base + (1 if c < extra else 0) for c in range(kernel)]
+    row_count = np.zeros(loop, dtype=int)
+    for c, q in enumerate(quotas):
+        # rows sorted by (count, rotated index) — stable spread
+        order = sorted(range(loop), key=lambda r: (row_count[r], (r - c) % loop))
+        for r in order[:q]:
+            mask[r, c] = True
+            row_count[r] += 1
+    return mask
+
+
+def _unbalanced(keep_total: int, kernel: int, loop: int) -> np.ndarray:
+    """Same keep rate but skewed per-position quotas (paper cav-*-2:
+    'different lines are kept from one time to four times')."""
+    base, extra = divmod(keep_total, kernel)
+    quotas = [base + (1 if c < extra else 0) for c in range(kernel)]
+    for c in range(0, kernel - 1, 2):               # shift odd -> even
+        move = min(quotas[c + 1], loop - quotas[c], 2)
+        quotas[c] += move
+        quotas[c + 1] -= move
+    mask = np.zeros((loop, kernel), dtype=bool)
+    row_count = np.zeros(loop, dtype=int)
+    for c, q in enumerate(quotas):
+        order = sorted(range(loop), key=lambda r: (row_count[r], (r - c) % loop))
+        for r in order[:q]:
+            mask[r, c] = True
+            row_count[r] += 1
+    return mask
+
+
+def tile_pattern(mask: np.ndarray, num_filters: int) -> np.ndarray:
+    """Tile the (loop, K) pattern over ``num_filters`` filters -> (F, K)."""
+    loop = mask.shape[0]
+    reps = int(np.ceil(num_filters / loop))
+    return np.tile(mask, (reps, 1))[:num_filters]
+
+
+def balance_stats(mask: np.ndarray) -> dict:
+    """Per-tap-position keep counts across the loop (paper's balance metric)."""
+    col = mask.sum(axis=0)
+    row = mask.sum(axis=1)
+    return {
+        "keep_frac": float(mask.mean()),
+        "per_position_min": int(col.min()),
+        "per_position_max": int(col.max()),
+        "per_kernel_min": int(row.min()),
+        "per_kernel_max": int(row.max()),
+        "balanced": bool(col.max() - col.min() <= 1),
+    }

@@ -1,0 +1,37 @@
+"""Quantization (paper C5): Q8.8 fixed point (bit-faithful reproduction) and
+an int8 weight-quantization path that is TPU-native (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+Q88_SCALE = 256.0          # 8 fractional bits
+Q88_MAX = 32767.0 / Q88_SCALE
+Q88_MIN = -32768.0 / Q88_SCALE
+
+
+def quantize_q88(x: jnp.ndarray) -> jnp.ndarray:
+    """Simulated Q8.8 fixed point: 8 integer + 8 fractional bits."""
+    return jnp.clip(jnp.round(x * Q88_SCALE), -32768, 32767) / Q88_SCALE
+
+
+def quantize_int8(w: jnp.ndarray, axis: int = -1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-channel symmetric int8 quantization.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(scale.dtype) * scale
+
+
+def int8_matmul(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """x @ dequant(q) with the dequant folded after the matmul so the MXU
+    sees int8 weights (XLA fuses the scale)."""
+    y = jnp.einsum("...i,io->...o", x, q.astype(x.dtype))
+    return y * scale.reshape(1, -1) if scale.ndim <= 1 else y * scale.T

@@ -1,0 +1,68 @@
+"""RFC-compressed activation checkpointing (beyond-paper application of C3).
+
+For a squared-ReLU MLP  y = relu(x·wi)² · wo  the hidden activation h is
+sparse (~50-60% zeros) and — because h = relu(z)² — the pre-activation is
+recoverable as sqrt(h) wherever h > 0.  So saving h in the paper's RFC
+bank/mini-bank format gives an *exact* backward pass:
+
+    dwo = hᵀ·g          dh = g·woᵀ
+    dz  = dh · 2·√h     (zero where h == 0, exactly relu's mask)
+    dwi = xᵀ·dz         dx = dz·wiᵀ
+
+with the stored bytes reduced by the activation sparsity (the paper's
+35.93% BRAM saving, applied to the HBM activation-checkpoint footprint)
+and no recompute of the up-projection — a third point on the usual
+remat/save trade-off curve.
+
+The jnp RFC codec here is the reference path; on TPU the Pallas
+`rfc_pack` kernels fuse encode with the producing matmul.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rfc.format import rfc_decode, rfc_encode
+
+
+@jax.custom_vjp
+def mlp_relu2_rfc(x: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """y = relu(x·wi)² · wo with RFC-checkpointed hidden activations."""
+    h = jnp.square(jax.nn.relu(x @ wi))
+    return h @ wo
+
+
+def _fwd(x, wi, wo):
+    z = x @ wi
+    h = jnp.square(jax.nn.relu(z))
+    y = h @ wo
+    vals, hot = rfc_encode(h, apply_relu=False)     # compressed residual
+    return y, (x, vals, hot, wi, wo)
+
+
+def _bwd(res, g):
+    x, vals, hot, wi, wo = res
+    h = rfc_decode(vals, hot)
+    dwo = jnp.einsum("...f,...d->fd", h, g)
+    dh = jnp.einsum("...d,fd->...f", g, wo)
+    dz = dh * 2.0 * jnp.sqrt(h)                      # zero exactly off-mask
+    dwi = jnp.einsum("...c,...f->cf", x, dz)
+    dx = jnp.einsum("...f,cf->...c", dz, wi)
+    return dx, dwi, dwo
+
+
+mlp_relu2_rfc.defvjp(_fwd, _bwd)
+
+
+def checkpoint_bytes(h: jnp.ndarray, bank: int = 16, minibank: int = 4
+                     ) -> Tuple[int, int]:
+    """(dense_bytes, rfc_bytes) for the stored hidden activation."""
+    import numpy as np
+    from repro.core.rfc.format import storage_cost
+    _, hot = rfc_encode(h, apply_relu=False)
+    c = storage_cost(np.asarray(hot) > 0, bank=bank, minibank=minibank,
+                     elem_bits=8 * h.dtype.itemsize)
+    return int(c["dense_bits"] // 8), int(c["rfc_bits"] // 8)

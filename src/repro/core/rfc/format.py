@@ -1,0 +1,117 @@
+"""RFC — Runtime Sparse Feature Compress format (paper §V-C, Fig. 7).
+
+A feature vector is split along channels into *banks* of width 16.  Each bank
+is ReLU'd, its non-zero elements are compacted to the front (the paper packs
+to the "higher bits" of the stream — same thing), a 16-bit *hot code* records
+which positions were non-zero, and an *mbhot* code records how many 4-deep
+*mini-banks* the compacted data occupies.  Loads/stores stay aligned — no
+CSC-style serial decode.
+
+This module is the pure-jnp reference (also the oracle for the Pallas
+kernels in ``repro.kernels``) plus the storage-cost model used for the
+paper's Fig. 11 comparison (dense vs CSC vs RFC).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rfc_encode(x: jnp.ndarray, bank: int = 16, apply_relu: bool = True
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode the last axis of ``x`` bank-by-bank.
+
+    Returns (values, hot):
+      values: same shape as x — each bank's non-zeros compacted to the front,
+              zero-padded (mini-bank truncation is a *storage* decision,
+              handled by the cost model / kernel, not by the math).
+      hot:    (..., C//bank, bank) bool — the per-bank hot code.
+    """
+    if x.shape[-1] % bank:
+        raise ValueError(f"channels {x.shape[-1]} not divisible by bank {bank}")
+    if apply_relu:
+        x = jnp.maximum(x, 0)
+    banks = x.reshape(*x.shape[:-1], x.shape[-1] // bank, bank)
+    hot = banks != 0
+    # stable partition: non-zeros first, preserving order (matches hardware
+    # gather-at-higher-bits behaviour)
+    order = jnp.argsort(~hot, axis=-1, stable=True)
+    values = jnp.take_along_axis(banks, order, axis=-1)
+    return values.reshape(x.shape), hot
+
+
+def rfc_decode(values: jnp.ndarray, hot: jnp.ndarray, bank: int = 16) -> jnp.ndarray:
+    """Inverse of :func:`rfc_encode` — scatter compacted values back."""
+    vb = values.reshape(*values.shape[:-1], values.shape[-1] // bank, bank)
+    # position of each original slot inside the compacted stream
+    pos = jnp.cumsum(hot.astype(jnp.int32), axis=-1) - 1
+    gathered = jnp.take_along_axis(vb, jnp.maximum(pos, 0), axis=-1)
+    out = jnp.where(hot, gathered, 0)
+    return out.reshape(values.shape)
+
+
+def mbhot(hot: jnp.ndarray, minibank: int = 4) -> jnp.ndarray:
+    """Number of mini-banks each bank occupies: ceil(nnz / minibank)."""
+    nnz = hot.sum(axis=-1)
+    return (nnz + minibank - 1) // minibank
+
+
+# ---------------------------------------------------------------------------
+# Storage-cost model (paper Fig. 11): bytes to hold one layer's activations.
+# ---------------------------------------------------------------------------
+
+def storage_cost(hot: np.ndarray, bank: int = 16, minibank: int = 4,
+                 elem_bits: int = 16) -> Dict[str, float]:
+    """Compare dense / CSC / RFC storage for activations with hot-mask ``hot``
+    of shape (..., n_banks, bank)."""
+    hot = np.asarray(hot)
+    n_elems = hot.size
+    nnz = int(hot.sum())
+    n_banks = n_elems // bank
+
+    dense_bits = n_elems * elem_bits
+    # CSC: values + row indices (log2(bank-dim) won't cut it for a real
+    # vector; the paper compares against per-element index + column pointers)
+    idx_bits = 8
+    csc_bits = nnz * (elem_bits + idx_bits) + (n_elems // bank) * 16
+    # RFC: mini-bank-rounded values + 16-bit hot + mbhot per bank
+    per_bank_nnz = hot.reshape(-1, bank).sum(axis=1)
+    mini_used = np.ceil(per_bank_nnz / minibank)
+    rfc_bits = int(mini_used.sum()) * minibank * elem_bits + n_banks * (bank + 4)
+
+    return {
+        "dense_bits": float(dense_bits),
+        "csc_bits": float(csc_bits),
+        "rfc_bits": float(rfc_bits),
+        "rfc_vs_dense_reduction": 1.0 - rfc_bits / dense_bits,
+        "csc_vs_dense_reduction": 1.0 - csc_bits / dense_bits,
+        "sparsity": 1.0 - nnz / n_elems,
+    }
+
+
+def minibank_depths(sparsity_quartiles: Tuple[float, float, float, float],
+                    total_depth: int, minibank: int = 4) -> Tuple[int, ...]:
+    """Paper §V-C: size mini-bank depths from the offline sparsity
+    distribution (fraction of vectors per sparsity quartile I..IV: 75-100%,
+    50-75%, 25-50%, 0-25% sparse -> needing 1..4 mini-banks)."""
+    q = np.asarray(sparsity_quartiles, dtype=np.float64)
+    q = q / q.sum()
+    # mini-bank m is used by vectors needing >= m+1 mini-banks
+    need = np.cumsum(q[::-1])[::-1]  # fraction needing >= k+1 banks, k=0..3
+    depths = np.ceil(need * total_depth).astype(int)
+    return tuple(int(d) for d in depths)
+
+
+def expected_sparsity_categories(hot: np.ndarray, bank: int = 16) -> Tuple[float, ...]:
+    """Bucket bank vectors into the paper's four sparsity categories
+    (Table III): I 75-100%, II 50-75%, III 25-50%, IV 0-25% sparse."""
+    s = 1.0 - np.asarray(hot).reshape(-1, bank).mean(axis=1)
+    return (
+        float((s >= 0.75).mean()),
+        float(((s >= 0.5) & (s < 0.75)).mean()),
+        float(((s >= 0.25) & (s < 0.5)).mean()),
+        float((s < 0.25).mean()),
+    )

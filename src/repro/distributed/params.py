@@ -1,0 +1,129 @@
+"""Parameter partition-spec derivation (2D ZeRO-3-style sharding).
+
+Rule per weight leaf (DESIGN.md §5):
+  * MoE expert tensors: the experts dim -> "model" (expert parallelism),
+    the largest remaining divisible dim -> "data".
+  * Everything else: of the last two dims, the larger divisible one ->
+    "model" (tensor parallelism), the other -> "data" (FSDP) if divisible.
+  * Dims smaller than 64, scan-stack leading dims, and 0/1-D leaves stay
+    replicated.
+
+This never shards a head axis, so odd head counts (smollm's 15H) are safe —
+flattened qkv feature dims are 16-divisible for every assigned arch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MIN_SHARD_DIM = 128
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+# weights whose CONTRACTION dim must live on "model" (Megatron row-parallel:
+# their producer's output is already model-sharded, so the matmul is local
+# and only the output needs a reduce-scatter)
+ROW_PARALLEL_NAMES = ("wo", "out_proj")
+
+
+def leaf_spec(path: str, shape, mesh: Mesh, expert_dim: Optional[int] = None
+              ) -> P:
+    ndim = len(shape)
+    spec = [None] * ndim
+    model_n = _axis_size(mesh, "model")
+    data_n = _axis_size(mesh, "data")
+    if ndim == 0:
+        return P()
+    leaf_name = path.rsplit("/", 1)[-1]
+
+    is_moe = "moe" in path or "router" in path
+    used_model = False
+    if is_moe and expert_dim and expert_dim in shape:
+        for i, d in enumerate(shape):           # experts dim -> model (EP)
+            if d == expert_dim and d % model_n == 0:
+                spec[i] = "model"
+                used_model = True
+                break
+
+    def ok(i, n):
+        return spec[i] is None and shape[i] >= MIN_SHARD_DIM and shape[i] % n == 0
+
+    if ndim >= 2:
+        if leaf_name == "embed":
+            # vocab -> model (sharded logits), d_model -> data (FSDP)
+            order_model, order_data = [ndim - 2], [ndim - 1]
+        elif any(leaf_name.startswith(n) for n in ROW_PARALLEL_NAMES):
+            # row-parallel: contraction (dim -2) on model, output on data
+            order_model, order_data = [ndim - 2], [ndim - 1]
+        else:
+            # column-parallel (wq/wk/wv/wi/wg/router/...): output (dim -1)
+            # on model, contraction on data
+            order_model, order_data = [ndim - 1], [ndim - 2]
+        if not used_model:
+            for i in order_model:
+                if ok(i, model_n):
+                    spec[i] = "model"
+                    used_model = True
+                    break
+        for i in order_data + order_model:
+            if ok(i, data_n):
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def _drop_data(spec: P) -> P:
+    return P(*[None if s == "data" else s for s in spec])
+
+
+def param_specs(params, mesh: Mesh, expert_dim: Optional[int] = None,
+                policy: str = "2d"):
+    """PartitionSpec tree matching ``params`` (works on ShapeDtypeStructs).
+
+    policies:
+      "2d"      — model (TP) + data (FSDP) on every weight
+      "zero2"   — model (TP) only on params (weights resident, no per-layer
+                  gathers); pair with 2D-sharded optimizer states so the
+                  resharding happens ONCE per step at the update
+      "dp_only" — replicate everything (small models where TP all-reduces
+                  of activations dwarf the weight footprint)"""
+    def f(path, leaf):
+        if policy == "dp_only":
+            return P()
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        spec = leaf_spec(pstr, leaf.shape, mesh, expert_dim)
+        if policy == "zero2":
+            spec = _drop_data(spec)
+        return spec
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(params, mesh: Mesh, expert_dim: Optional[int] = None,
+                    policy: str = "2d"):
+    specs = param_specs(params, mesh, expert_dim, policy)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes(params, specs, mesh: Mesh) -> int:
+    """Per-device parameter bytes under the given specs."""
+    total = 0
+    for (path, leaf), (_, spec) in zip(
+        jax.tree_util.tree_leaves_with_path(params),
+        jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        ),
+    ):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        div = 1
+        for ax in spec:
+            if ax is not None:
+                div *= mesh.shape[ax]
+        total += n * leaf.dtype.itemsize // div
+    return total

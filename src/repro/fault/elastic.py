@@ -1,0 +1,72 @@
+"""Elastic re-meshing: when hosts die mid-run, plan a smaller mesh, re-derive
+every sharding for it, and restore the latest checkpoint onto it.
+
+The planner keeps the model axis intact (tensor-parallel degree is baked
+into layer math performance, and all our dims divide 16) and shrinks the
+data axis to the largest power-of-two that the surviving chip count
+supports — the standard elastic-DP policy.  Global batch is preserved by
+raising gradient-accumulation microbatches, so optimization is bit-wise
+comparable before/after the shrink.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.common.config import TrainConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    pods: int
+    microbatch_multiplier: int
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model * self.pods
+
+
+def plan_degraded_mesh(
+    alive_chips: int,
+    *,
+    model: int = 16,
+    old_data: int = 16,
+    pods: int = 1,
+) -> Optional[MeshPlan]:
+    """Largest power-of-two data axis that fits the survivors (model axis
+    fixed).  Returns None if fewer than one model group survives."""
+    if alive_chips < model:
+        return None
+    data = 1
+    while data * 2 * model * pods <= alive_chips and data * 2 <= old_data:
+        data *= 2
+    return MeshPlan(
+        data=data, model=model, pods=pods,
+        microbatch_multiplier=old_data // data,
+    )
+
+
+def degraded_mesh(plan: MeshPlan):
+    shape = ((plan.pods, plan.data, plan.model) if plan.pods > 1
+             else (plan.data, plan.model))
+    axes = ("pod", "data", "model") if plan.pods > 1 else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def adjust_train_config(tcfg: TrainConfig, plan: MeshPlan) -> TrainConfig:
+    return dataclasses.replace(
+        tcfg, microbatches=tcfg.microbatches * plan.microbatch_multiplier
+    )
+
+
+def reshard_checkpoint(ckpt_dir: str, step: int, like, mesh, shardings):
+    """Restore a checkpoint saved under any mesh onto a new mesh: leaves are
+    stored unsharded (per-leaf .npy), so restore + device_put with the new
+    shardings IS the reshard."""
+    from repro.checkpoint.store import restore
+    host_tree = restore(ckpt_dir, step, like)
+    return jax.device_put(host_tree, shardings)

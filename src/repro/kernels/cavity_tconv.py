@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the cavity-pruned temporal convolution (paper C2).
+
+The cavity pattern is a recurring loop of ``L`` (=8) tap masks, so filters
+fall into L *groups with identical tap sets* (filter f -> group f % L after
+the ops-layer permutation).  Within a group the conv is a dense
+gather-over-kept-taps + matmul — exactly the FLOP skip of the paper with
+full MXU utilisation and static, balanced per-group work (the paper's
+"balanced pruning" requirement becomes tile balance here; DESIGN.md §2).
+
+Layouts (after the ops.py re-pack):
+  x:    (B, T_pad, C)            input, already zero-padded by K//2 on T
+  wp:   (L, n_keep, C, Fg)       packed kept-tap weights per group (taps with
+                                 zero weight pad groups that keep fewer taps)
+  taps: (L, n_keep) int32        kept tap offsets per group
+  out:  (B, T_out, L, Fg)        per-group outputs (ops.py un-permutes)
+
+Grid: (B tiles, L groups).  Each grid step reads the taps row of its group
+(block-indexed, so the tap offsets are *per-block constants*) and issues
+``n_keep`` shifted (C×Fg) matmuls instead of K=9 — the paper's skip ratio.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_TILE = 16
+
+
+def _kernel(x_ref, w_ref, taps_ref, out_ref, *, n_keep: int, t_out: int,
+            stride: int):
+    acc = jnp.zeros((x_ref.shape[0], t_out, w_ref.shape[-1]), jnp.float32)
+    for j in range(n_keep):                        # static loop over kept taps
+        off = taps_ref[0, j]
+        xs = pl.load(
+            x_ref,
+            (slice(None), pl.dslice(off, t_out * stride), slice(None)),
+        )
+        if stride > 1:
+            xs = xs[:, ::stride, :]
+        w = w_ref[0, j]                            # (C, Fg)
+        acc += jax.lax.dot_general(
+            xs, w, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[...] = acc[:, :, None, :].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_size", "stride", "interpret"))
+def cavity_tconv_pallas(
+    x: jnp.ndarray,        # (B, T_pad, C)
+    wp: jnp.ndarray,       # (L, n_keep, C, Fg)
+    taps: jnp.ndarray,     # (L, n_keep) int32
+    kernel_size: int = 9,
+    stride: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, T_pad, C = x.shape
+    L, n_keep, _, Fg = wp.shape
+    T_out = (T_pad - kernel_size + 1) // stride
+    b_tile = B_TILE if B % B_TILE == 0 else B
+    grid = (B // b_tile, L)
+
+    in_spec = pl.BlockSpec((b_tile, T_pad, C), lambda b, g: (b, 0, 0))
+    w_spec = pl.BlockSpec((1, n_keep, C, Fg), lambda b, g: (g, 0, 0, 0))
+    taps_spec = pl.BlockSpec((1, n_keep), lambda b, g: (g, 0))
+    out_spec = pl.BlockSpec((b_tile, T_out, 1, Fg), lambda b, g: (b, 0, g, 0))
+
+    kern = functools.partial(_kernel, n_keep=n_keep, t_out=T_out, stride=stride)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[in_spec, w_spec, taps_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T_out, L, Fg), x.dtype),
+        interpret=interpret,
+    )(x, wp, taps)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the fused, reorganized graph + 1×1 spatial conv
+(paper C1, eq. (5)).
+
+Computes   out = Σ_k (G_k · x) · W_k   in one VMEM pass: the graph matmul
+(V×V, V=25 padded to 32 lanes) and the pruned 1×1 conv share the x tile, so
+the intermediate (G·x) never round-trips to HBM — the TPU analogue of the
+paper's on-chip dataflow where graph results feed Mult-PEs directly.
+
+Channel compaction happens in ops.py (kept channels gathered before the
+call), so Cin here is the *kept* channel count — the graph-skip is already
+realised in the shapes.
+
+Layouts:
+  x:   (R, V, Cin)    rows = N*T (flattened batch×time)
+  g:   (K, V, V)      static + learned graph, padded to Vp
+  w:   (K, Cin, Cout)
+  out: (R, V, Cout)
+Grid: (R tiles, Cout tiles); K is a static in-kernel loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R_TILE = 128
+CO_TILE = 128
+
+
+def _kernel(x_ref, g_ref, w_ref, out_ref, *, kv: int):
+    x = x_ref[...]                                  # (r, Vp, Cin)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for k in range(kv):                             # K_v = 3, static
+        gk = g_ref[k]                               # (Vp, Vp)
+        # graph matmul: y[r, w, c] = sum_v gk[w, v] * x[r, v, c]
+        y = jax.lax.dot_general(
+            gk, x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                           # (Vp, r, Cin)
+        y = jnp.transpose(y, (1, 0, 2))             # (r, Vp, Cin)
+        wk = w_ref[k]                               # (Cin, co)
+        acc += jax.lax.dot_general(
+            y, wk, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def graph_sconv_pallas(
+    x: jnp.ndarray,      # (R, Vp, Cin)
+    g: jnp.ndarray,      # (K, Vp, Vp)
+    w: jnp.ndarray,      # (K, Cin, Cout)
+    interpret: bool = True,
+) -> jnp.ndarray:
+    R, Vp, Cin = x.shape
+    K, _, Cout = w.shape
+    r_tile = R_TILE if R % R_TILE == 0 else R
+    co_tile = CO_TILE if Cout % CO_TILE == 0 else Cout
+    grid = (R // r_tile, Cout // co_tile)
+
+    in_spec = pl.BlockSpec((r_tile, Vp, Cin), lambda r, c: (r, 0, 0))
+    g_spec = pl.BlockSpec((K, Vp, Vp), lambda r, c: (0, 0, 0))
+    w_spec = pl.BlockSpec((K, Cin, co_tile), lambda r, c: (0, 0, c))
+    out_spec = pl.BlockSpec((r_tile, Vp, co_tile), lambda r, c: (r, 0, c))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, kv=K),
+        grid=grid,
+        in_specs=[in_spec, g_spec, w_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Vp, Cout), x.dtype),
+        interpret=interpret,
+    )(x, g, w)

@@ -1,0 +1,135 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle layout adaptation (padding, filter-group permutation, kept-tap
+packing) so callers use natural shapes; the kernels see hardware-aligned
+tiles.  ``interpret`` defaults to True because this container is CPU-only —
+on TPU pass interpret=False and the same BlockSpecs compile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cavity_tconv import cavity_tconv_pallas
+from repro.kernels.graph_sconv import graph_sconv_pallas
+from repro.kernels.rfc_pack import rfc_decode_pallas, rfc_encode_pallas
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# RFC
+# ---------------------------------------------------------------------------
+
+def rfc_encode(x: jnp.ndarray, bank: int = 16, interpret: bool = True):
+    """Encode activations of any (..., C) shape; returns (values, hot)."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    rows = flat.shape[0]
+    flat = _pad_to(_pad_to(flat, 1, bank), 0, 8)
+    vals, hot = rfc_encode_pallas(flat, bank=bank, interpret=interpret)
+    vals = vals[:rows, : shape[-1]].reshape(shape)
+    hot = hot[:rows, : shape[-1]].reshape(shape)
+    return vals, hot
+
+
+def rfc_decode(values: jnp.ndarray, hot: jnp.ndarray, bank: int = 16,
+               interpret: bool = True) -> jnp.ndarray:
+    shape = values.shape
+    v = _pad_to(_pad_to(values.reshape(-1, shape[-1]), 1, bank), 0, 8)
+    h = _pad_to(_pad_to(hot.reshape(-1, shape[-1]), 1, bank), 0, 8)
+    out = rfc_decode_pallas(v, h, bank=bank, interpret=interpret)
+    return out[: int(np.prod(shape[:-1])), : shape[-1]].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Cavity temporal conv
+# ---------------------------------------------------------------------------
+
+def pack_cavity_weights(
+    w: np.ndarray,           # (F, C, K) dense weights of the *kept* filters
+    tap_mask: np.ndarray,    # (F, K) bool — cavity pattern tiled to F
+    loop: int = 8,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Group filters by recurring pattern row (f % loop) and pack kept taps.
+
+    Returns (wp (L, n_keep, C, Fg), taps (L, n_keep) int32, perm (F,) int32)
+    where out_dense[..., perm] reassembles the natural filter order from the
+    (L, Fg) kernel output.  Filters are zero-padded to a multiple of loop.
+    """
+    F, C, K = w.shape
+    Fp = ((F + loop - 1) // loop) * loop
+    if Fp != F:
+        w = np.concatenate([w, np.zeros((Fp - F, C, K), w.dtype)], 0)
+        tap_mask = np.concatenate(
+            [tap_mask, np.tile(tap_mask[:1], (Fp - F, 1))], 0
+        )
+    Fg = Fp // loop
+    n_keep = int(tap_mask[:loop].sum(axis=1).max())
+    wp = np.zeros((loop, n_keep, C, Fg), w.dtype)
+    taps = np.zeros((loop, n_keep), np.int32)
+    for g in range(loop):
+        kept = np.flatnonzero(tap_mask[g])
+        taps[g, : len(kept)] = kept
+        for j, k in enumerate(kept):
+            # filters g, g+loop, g+2*loop, ... share this tap set
+            wp[g, j] = w[g::loop, :, k].T          # (C, Fg)
+    # kernel output flattens (L, Fg): slot g*Fg+i holds filter g + loop*i
+    inv = np.empty(Fp, np.int32)
+    order = np.arange(Fp).reshape(Fg, loop).T.reshape(-1)  # (L, Fg) flat -> f
+    inv[order] = np.arange(Fp)
+    return wp, taps, inv[:Fp]
+
+
+def cavity_tconv(
+    x: jnp.ndarray,          # (B, T, C)
+    wp: jnp.ndarray,
+    taps: jnp.ndarray,
+    inv_perm: np.ndarray,
+    num_filters: int,
+    kernel_size: int = 9,
+    stride: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Cavity-pruned temporal conv, 'same' padding.  Returns (B, T_out, F)."""
+    pad = kernel_size // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (0, 0)))
+    out = cavity_tconv_pallas(
+        xp, wp, taps, kernel_size=kernel_size, stride=stride,
+        interpret=interpret,
+    )                                                 # (B, T_out, L, Fg)
+    B, T_out, L, Fg = out.shape
+    flat = out.reshape(B, T_out, L * Fg)
+    flat = jnp.take(flat, jnp.asarray(inv_perm), axis=-1)
+    return flat[..., :num_filters]
+
+
+# ---------------------------------------------------------------------------
+# Fused graph + spatial conv
+# ---------------------------------------------------------------------------
+
+def graph_sconv(
+    x: jnp.ndarray,          # (N, T, V, Cin) — kept channels already gathered
+    g: jnp.ndarray,          # (K, V, V)
+    w: jnp.ndarray,          # (K, Cin, Cout)
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused Σ_k (G_k·x)·W_k.  Returns (N, T, V, Cout)."""
+    N, T, V, Cin = x.shape
+    Vp = ((V + 7) // 8) * 8                          # sublane-align joints
+    xr = _pad_to(x.reshape(N * T, V, Cin), 1, 8)
+    gp = jnp.zeros((g.shape[0], Vp, Vp), g.dtype).at[:, :V, :V].set(g)
+    out = graph_sconv_pallas(xr, gp, w, interpret=interpret)
+    return out[:, :V, :].reshape(N, T, V, -1)

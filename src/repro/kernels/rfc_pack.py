@@ -1,0 +1,98 @@
+"""Pallas TPU kernels for RFC encode/decode (paper §V-C → DESIGN.md §2).
+
+TPU-native formulation: in-bank compaction is a *permutation*, and a 16×16
+permutation is a tiny matmul — so instead of a sort (which lowers poorly to
+the VPU) we build the one-hot compaction matrix from a cumulative sum of the
+hot mask and contract with it.  All lane accesses stay aligned; the bank
+width 16 maps onto the VREG lane dimension, mirroring the paper's
+"one-cycle aligned access" property.
+
+Layouts:
+  x:       (rows, C)            activations, C % bank == 0
+  values:  (rows, C)            compacted banks (front-packed, zero padded)
+  hot:     (rows, C) float mask (1.0 where the ReLU output was non-zero)
+
+``interpret=True`` is used on CPU (this container); on TPU the same kernels
+compile with the BlockSpecs below.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BANK = 16
+ROW_TILE = 256
+COL_TILE = 256
+
+
+def _encode_kernel(x_ref, vals_ref, hot_ref, *, bank: int):
+    x = x_ref[...]
+    rows, cols = x.shape
+    x = jnp.maximum(x, 0.0)                       # fused ReLU (paper: encode
+    b = x.reshape(rows, cols // bank, bank)       #  is combined with ReLU)
+    hot = (b > 0.0).astype(x.dtype)
+    # position of each non-zero inside the compacted stream
+    pos = jnp.cumsum(hot, axis=-1) - 1.0
+    tgt = jax.lax.broadcasted_iota(x.dtype, (rows, cols // bank, bank, bank), 3)
+    # perm[i, j] = 1 iff element i is the j-th non-zero of its bank
+    perm = (pos[..., None] == tgt) * hot[..., None]
+    vals = jnp.einsum("rbi,rbij->rbj", b, perm, preferred_element_type=x.dtype)
+    vals_ref[...] = vals.reshape(rows, cols)
+    hot_ref[...] = hot.reshape(rows, cols)
+
+
+def _decode_kernel(vals_ref, hot_ref, out_ref, *, bank: int):
+    vals = vals_ref[...]
+    hot = hot_ref[...]
+    rows, cols = vals.shape
+    v = vals.reshape(rows, cols // bank, bank)
+    h = hot.reshape(rows, cols // bank, bank)
+    pos = jnp.cumsum(h, axis=-1) - 1.0
+    tgt = jax.lax.broadcasted_iota(vals.dtype, (rows, cols // bank, bank, bank), 3)
+    perm = (pos[..., None] == tgt) * h[..., None]          # (r, b, i, j)
+    out = jnp.einsum("rbj,rbij->rbi", v, perm, preferred_element_type=vals.dtype)
+    out_ref[...] = out.reshape(rows, cols)
+
+
+def _grid_specs(rows: int, cols: int, n_out: int):
+    grid = (pl.cdiv(rows, ROW_TILE), pl.cdiv(cols, COL_TILE))
+    spec = pl.BlockSpec((ROW_TILE, COL_TILE), lambda r, c: (r, c))
+    return grid, spec
+
+
+@functools.partial(jax.jit, static_argnames=("bank", "interpret"))
+def rfc_encode_pallas(x: jnp.ndarray, bank: int = BANK, interpret: bool = True):
+    """ReLU + bank-compact.  x: (rows, C) -> (values, hot) both (rows, C)."""
+    rows, cols = x.shape
+    if cols % bank:
+        raise ValueError(f"C={cols} not divisible by bank={bank}")
+    grid, spec = _grid_specs(rows, cols, 2)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, bank=bank),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bank", "interpret"))
+def rfc_decode_pallas(values: jnp.ndarray, hot: jnp.ndarray, bank: int = BANK,
+                      interpret: bool = True) -> jnp.ndarray:
+    rows, cols = values.shape
+    grid, spec = _grid_specs(rows, cols, 1)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bank=bank),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), values.dtype),
+        interpret=interpret,
+    )(values, hot)

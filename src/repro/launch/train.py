@@ -1,0 +1,127 @@
+"""Training driver: wires config -> data -> sharded train_step -> checkpoint
+-> fault monitors.  On this CPU container it runs reduced configs end-to-end
+(examples/ use it); on a real cluster the same driver runs under
+``jax.distributed.initialize`` with the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import TrainConfig
+from repro.configs import get_config
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, make_batches
+from repro.distributed import sharding as shd
+from repro.distributed.params import param_shardings
+from repro.fault.monitor import HeartbeatMonitor, StragglerDetector
+from repro.models import registry
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+
+
+def train_loop(
+    arch: str,
+    tcfg: TrainConfig,
+    *,
+    reduced: bool = True,
+    batch: int = 8,
+    seq: int = 128,
+    mesh=None,
+    log_every: int = 10,
+    resume: bool = True,
+):
+    cfg = get_config(arch, reduced=reduced)
+    if mesh is None:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+    hosts = jax.process_count()
+    heart = HeartbeatMonitor(num_hosts=hosts)
+    strag = StragglerDetector(num_hosts=hosts)
+
+    dcfg = DataConfig(global_batch=batch, seq_len=seq, seed=tcfg.seed,
+                      host_index=jax.process_index(), host_count=hosts)
+    data = make_batches(cfg, dcfg)
+
+    with shd.axis_rules(mesh):
+        params = registry.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+        p_shardings = param_shardings(params, mesh,
+                                      expert_dim=cfg.padded_experts or None)
+        params = jax.device_put(params, p_shardings)
+        opt_state = adamw.init(params)
+
+        start = 0
+        if resume:
+            last = store.latest_step(tcfg.checkpoint_dir)
+            if last is not None:
+                params = store.restore(tcfg.checkpoint_dir, last, params)
+                params = jax.device_put(params, p_shardings)
+                opt_state = adamw.init(params)   # moments restart (see DESIGN)
+                ckpt = store.restore(
+                    tcfg.checkpoint_dir + "/opt", last, opt_state)
+                opt_state = ckpt
+                start = last
+                print(f"[resume] from step {last}")
+
+        step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+        losses = []
+        pending_ckpt: Optional[object] = None
+        for step in range(start, tcfg.total_steps):
+            t0 = time.monotonic()
+            raw = next(data)
+            b = jax.tree_util.tree_map(jnp.asarray, raw)
+            params, opt_state, metrics = step_fn(params, opt_state, b)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.monotonic() - t0
+            heart.beat(jax.process_index())
+            strag.record(jax.process_index(), dt)
+            if step % log_every == 0 or step == tcfg.total_steps - 1:
+                print(f"step {step:5d}  loss {loss:8.4f}  "
+                      f"gnorm {float(metrics.get('grad_norm', 0)):7.3f}  "
+                      f"{dt*1e3:7.1f} ms")
+            if tcfg.checkpoint_every and (step + 1) % tcfg.checkpoint_every == 0:
+                store.save(tcfg.checkpoint_dir, step + 1, params)
+                store.save(tcfg.checkpoint_dir + "/opt", step + 1, opt_state)
+            if not heart.healthy():
+                raise RuntimeError(f"dead hosts: {heart.dead_hosts()}")
+        return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+    tcfg = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(1, args.steps // 10),
+        microbatches=args.microbatches,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt_dir,
+    )
+    _, losses = train_loop(args.arch, tcfg, reduced=args.reduced,
+                           batch=args.batch, seq=args.seq)
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    else:
+        print("nothing to do (checkpoint already past --steps)")
+
+
+if __name__ == "__main__":
+    main()

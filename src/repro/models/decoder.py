@@ -1,0 +1,241 @@
+"""Decoder-only transformer family: dense (danube/internlm2/smollm/gemma3),
+MoE (qwen3/granite), and VLM (llava — text backbone consuming stub patch
+embeddings).
+
+Layers are stacked into scan groups (cfg.scan_group layers per group) so the
+HLO stays O(1) in depth; mixed attention patterns (gemma3's 5 local : 1
+global) put one pattern period inside each group, unrolled in the group body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers.attention import attention_layer, attn_init
+from repro.models.layers.common import he_init, rmsnorm, rmsnorm_init
+from repro.models.layers.mlp import mlp, mlp_init
+from repro.models.layers.moe import moe_ffn, moe_init
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg: ModelConfig) -> List[str]:
+    """Per-layer attention kind within one scan group."""
+    g = scan_group_size(cfg)
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio
+        return ["local"] * r + ["global"] * (g - r) if g == r + 1 else (
+            (["local"] * r + ["global"]) * (g // (r + 1))
+        )
+    if cfg.window_size > 0:
+        return ["local"] * g
+    return ["global"] * g
+
+
+def scan_group_size(cfg: ModelConfig) -> int:
+    if cfg.local_global_ratio > 0:
+        return cfg.local_global_ratio + 1
+    return max(1, cfg.scan_group)
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    g = scan_group_size(cfg)
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    return cfg.num_layers // g
+
+
+def _window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window_size if kind == "local" else 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.head_dim),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe_d_ff, cfg.num_experts,
+                            cfg.padded_experts)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Dict:
+    g = scan_group_size(cfg)
+    ng = num_groups(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 2)
+
+    def group(gi):
+        layers = [_layer_init(keys[gi * g + i], cfg) for i in range(g)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+    groups = [group(gi) for gi in range(ng)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups)
+    params = {
+        "embed": he_init(keys[-1], (cfg.padded_vocab, cfg.d_model), cfg.d_model),
+        "layers": stacked,                     # leaves: (ng, g, ...)
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "vlm":
+        params["img_proj"] = he_init(keys[-2], (cfg.d_model, cfg.d_model),
+                                     cfg.d_model)
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _group_body(cfg: ModelConfig, kinds: List[str]):
+    def body(x, gp, positions, caches):
+        new_caches = [] if caches is not None else None
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(kinds):
+            lp = jax.tree_util.tree_map(lambda a: a[i], gp)
+            cache_i = (
+                jax.tree_util.tree_map(lambda a: a[i], caches)
+                if caches is not None else None
+            )
+            # explicit SP boundary: all-gather the normed activations over
+            # the model axis ONCE here, so the blocked flash internals never
+            # get seq-sharded (XLA otherwise reshards them with per-layer
+            # all-to-alls — perf iteration A1, EXPERIMENTS §Perf)
+            attn_in = constrain(
+                rmsnorm(x, lp["ln1"], cfg.norm_eps), "batch", None, None)
+            h, new_c = attention_layer(
+                lp["attn"], attn_in, positions,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                causal=True, window=_window(cfg, kind), cache=cache_i,
+            )
+            x = x + h
+            h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                h2, a = moe_ffn(
+                    lp["moe"], h2, num_experts=cfg.num_experts,
+                    top_k=cfg.experts_per_token,
+                    capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+                )
+                aux = aux + a
+            else:
+                h2 = mlp(lp["mlp"], h2, cfg.act)
+            x = x + h2
+            x = constrain(x, "batch", "seq_shard", None)
+            if new_caches is not None:
+                new_caches.append(new_c)
+        if new_caches is not None:
+            new_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_caches
+            )
+        return x, new_caches, aux
+    return body
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    )
+    return jax.checkpoint(f, policy=policy)
+
+
+def forward(
+    params: Dict,
+    tokens: jnp.ndarray,                    # (B, S) int32
+    cfg: ModelConfig,
+    image_embeds: Optional[jnp.ndarray] = None,   # vlm: (B, N_img, d)
+    caches: Optional[Any] = None,           # stacked (ng, g, ...) KV caches
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Any], jnp.ndarray]:
+    """Returns (logits (B,S_total,Vp), new_caches, aux_loss)."""
+    kinds = layer_kinds(cfg)
+    body = _group_body(cfg, kinds)
+    x = jnp.take(params["embed"], tokens, axis=0) * np.sqrt(cfg.d_model)
+    if cfg.family == "vlm" and image_embeds is not None:
+        img = image_embeds @ params["img_proj"]
+        x = jnp.concatenate([img.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", "seq_shard", None)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    if caches is None:
+        def scan_fn(carry, gp):
+            h, aux = carry
+            h, _, a = body(h, gp, positions, None)
+            return (h, aux + a), None
+        scan_body = _remat(scan_fn, cfg)
+        (x, aux), _ = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+        new_caches = None
+    else:
+        def scan_fn(carry, inp):
+            h, aux = carry
+            gp, cache = inp
+            h, new_c, a = body(h, gp, positions, cache)
+            return (h, aux + a), new_c
+        (x, aux), new_caches = jax.lax.scan(
+            scan_fn, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], caches),
+        )
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """SWA ring buffer: a uniform sliding window only ever needs `window`
+    slots (RoPE is applied before caching and softmax is order-invariant,
+    so ring slots attend exactly like the true last-`window` tokens).
+    Mixed local:global stacks (gemma3) keep full length — the global
+    layers need it and cache groups are stacked uniformly."""
+    if cfg.window_size > 0 and cfg.local_global_ratio == 0:
+        return min(max_len, cfg.window_size)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ng, g = num_groups(cfg), scan_group_size(cfg)
+    L = cache_len(cfg, max_len)
+    kv = {
+        "k": jnp.zeros((ng, g, batch, L, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((ng, g, batch, L, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+        "pos": jnp.zeros((ng, g), jnp.int32),
+    }
+    return kv
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical axes of each cache leaf (for dry-run shardings)."""
+    return {
+        "k": (None, None, "batch", "kv_seq", None, "kv_hd"),
+        "v": (None, None, "batch", "kv_seq", None, "kv_hd"),
+        "pos": (None, None),
+    }

@@ -1,0 +1,151 @@
+"""Encoder-decoder transformer (Whisper-small backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, encoder_frames, d).  LayerNorm + learned
+absolute positions + non-gated GELU MLP, as in Whisper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers.attention import attention_layer, attn_init
+from repro.models.layers.common import he_init, layernorm, layernorm_init
+
+
+def _mlp_init(key, d, dff):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": he_init(k1, (d, dff), d),
+        "wo": he_init(k2, (dff, d), dff),
+    }
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layernorm_init(cfg.d_model), "ln2": layernorm_init(cfg.d_model),
+        "attn": attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.head_dim),
+        "mlp": _mlp_init(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    p = _enc_layer_init(key, cfg)
+    p["ln_x"] = layernorm_init(cfg.d_model)
+    p["xattn"] = attn_init(ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.head_dim)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Dict:
+    enc_l = cfg.encoder_layers or cfg.num_layers
+    keys = jax.random.split(key, enc_l + cfg.num_layers + 3)
+    enc = [_enc_layer_init(keys[i], cfg) for i in range(enc_l)]
+    dec = [_dec_layer_init(keys[enc_l + i], cfg) for i in range(cfg.num_layers)]
+    params = {
+        "embed": he_init(keys[-1], (cfg.padded_vocab, cfg.d_model), cfg.d_model),
+        "enc_pos": he_init(keys[-2], (cfg.encoder_frames, cfg.d_model),
+                           cfg.d_model) * 0.02,
+        "dec_pos": he_init(keys[-3], (32_768, cfg.d_model), cfg.d_model) * 0.02,
+        "enc_layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": layernorm_init(cfg.d_model),
+        "dec_norm": layernorm_init(cfg.d_model),
+    }
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), params)
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, F, d) stub embeddings -> encoder memory (B, F, d)."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a, _ = attention_layer(
+            lp["attn"], layernorm(h, lp["ln1"]), positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=False,
+        )
+        h = h + a
+        h = h + _mlp(lp["mlp"], layernorm(h, lp["ln2"]))
+        return constrain(h, "batch", None, None), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return layernorm(x, params["enc_norm"])
+
+
+def decode(
+    params: Dict,
+    tokens: jnp.ndarray,                 # (B, S)
+    memory: jnp.ndarray,                 # (B, F, d)
+    cfg: ModelConfig,
+    caches: Optional[Any] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Any]]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    x = x + jnp.take(params["dec_pos"], positions, axis=0)
+    x = constrain(x, "batch", None, None)
+
+    def body(carry, inp):
+        h = carry
+        if caches is None:
+            lp, cache = inp, None
+        else:
+            lp, cache = inp
+        a, new_c = attention_layer(
+            lp["attn"], layernorm(h, lp["ln1"]), positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True,
+            cache=cache,
+        )
+        h = h + a
+        xa, _ = attention_layer(
+            lp["xattn"], layernorm(h, lp["ln_x"]), positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=False,
+            memory=memory,
+        )
+        h = h + xa
+        h = h + _mlp(lp["mlp"], layernorm(h, lp["ln2"]))
+        return constrain(h, "batch", None, None), new_c
+
+    if caches is None:
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+        new_caches = None
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = layernorm(x, params["dec_norm"])
+    logits = x @ params["embed"].T
+    return constrain(logits, "batch", None, "vocab"), new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((L,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    return {
+        "k": (None, "batch", "kv_seq", None, "kv_hd"),
+        "v": (None, "batch", "kv_seq", None, "kv_hd"),
+        "pos": (None,),
+    }

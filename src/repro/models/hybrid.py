@@ -1,0 +1,226 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a *shared* (weight-tied)
+attention+MLP block applied periodically.
+
+Structure (cfg.num_layers total applications): scan over ``ng`` groups of
+[1 shared attention block + (shared_attn_every) mamba layers], plus a tail
+of unrolled mamba layers so the counts match exactly
+(81 = 11 × (1 + 6) + 4 for zamba2-7b).  The shared block's weights are
+closed over (NOT scanned), reproducing Zamba's parameter sharing; each
+application gets its own input LayerNorm (a simplification of Zamba's
+per-use LoRA, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers.attention import attention_layer, attn_init
+from repro.models.layers.common import he_init, rmsnorm, rmsnorm_init
+from repro.models.layers.mamba2 import HEAD_P, mamba2_init, mamba2_layer
+from repro.models.layers.mlp import mlp, mlp_init
+
+
+def structure(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(num_groups, mamba_per_group, tail_mamba)."""
+    per = cfg.shared_attn_every
+    ng = cfg.num_layers // (per + 1)
+    tail = cfg.num_layers - ng * (per + 1)
+    return ng, per, tail
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Dict:
+    ng, per, tail = structure(cfg)
+    n_mamba = ng * per + tail
+    keys = jax.random.split(key, n_mamba + 4)
+
+    mamba = [
+        {"ln": rmsnorm_init(cfg.d_model),
+         "cell": mamba2_init(keys[i], cfg.d_model, cfg.ssm_state, cfg.ssm_expand)}
+        for i in range(n_mamba)
+    ]
+    grouped = [
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *mamba[g * per : (g + 1) * per]
+        )
+        for g in range(ng)
+    ]
+    k_attn, k_mlp, k_emb = keys[-3], keys[-2], keys[-1]
+    params = {
+        "embed": he_init(k_emb, (cfg.padded_vocab, cfg.d_model), cfg.d_model),
+        "mamba_groups": jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *grouped
+        ),
+        "mamba_tail": (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *mamba[ng * per:])
+            if tail else None
+        ),
+        # one shared block, used at every group boundary (weight tying)
+        "shared": {
+            "attn": attn_init(k_attn, cfg.d_model, cfg.num_heads,
+                              cfg.num_kv_heads, cfg.head_dim),
+            "mlp": mlp_init(k_mlp, cfg.d_model, cfg.d_ff),
+            "ln2": rmsnorm_init(cfg.d_model),
+        },
+        # per-use input norms for the shared block
+        "use_ln": {"scale": jnp.ones((ng, cfg.d_model), jnp.float32)},
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if x is not None else None, params,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def _shared_block(cfg, shared, ln_scale, x, positions, cache):
+    h = rmsnorm(x, {"scale": ln_scale}, cfg.norm_eps)
+    a, new_c = attention_layer(
+        shared["attn"], h, positions,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True,
+        cache=cache,
+    )
+    x = x + a
+    x = x + mlp(shared["mlp"], rmsnorm(x, shared["ln2"], cfg.norm_eps), cfg.act)
+    return x, new_c
+
+
+def _mamba_block(cfg, lp, x, cache):
+    h, new_c = mamba2_layer(
+        lp["cell"], rmsnorm(x, lp["ln"], cfg.norm_eps), cfg.ssm_state,
+        cfg.ssm_expand, cache,
+    )
+    return x + h, new_c
+
+
+def forward(
+    params: Dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    caches: Optional[Any] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Any]]:
+    ng, per, tail = structure(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0) * np.sqrt(cfg.d_model)
+    x = constrain(x, "batch", "seq_shard", None)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    shared = params["shared"]
+
+    def body(h, inp):
+        if caches is None:
+            (gp, ln_scale), cache = inp, None
+        else:
+            gp, ln_scale, cache = inp
+        c_attn = cache["attn"] if cache is not None else None
+        h, new_attn = _shared_block(cfg, shared, ln_scale, h, positions, c_attn)
+        new_m = []
+        for i in range(per):
+            lp = jax.tree_util.tree_map(lambda a: a[i], gp)
+            c_i = (
+                jax.tree_util.tree_map(lambda a: a[i], cache["mamba"])
+                if cache is not None else None
+            )
+            h, nc = _mamba_block(cfg, lp, h, c_i)
+            new_m.append(nc)
+        h = constrain(h, "batch", "seq_shard", None)
+        if cache is None:
+            return h, None
+        return h, {
+            "attn": new_attn,
+            "mamba": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m),
+        }
+
+    if caches is None:
+        x, _ = jax.lax.scan(
+            jax.checkpoint(body), x,
+            (params["mamba_groups"], params["use_ln"]["scale"]),
+        )
+        new_caches: Optional[Dict] = None
+        tail_caches = None
+    else:
+        x, group_caches = jax.lax.scan(
+            body, x,
+            (params["mamba_groups"], params["use_ln"]["scale"], caches["groups"]),
+        )
+        new_caches = {"groups": group_caches}
+        tail_caches = caches.get("tail")
+
+    if tail:
+        new_tail = []
+        for i in range(tail):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["mamba_tail"])
+            c_i = (
+                jax.tree_util.tree_map(lambda a: a[i], tail_caches)
+                if tail_caches is not None else None
+            )
+            x, nc = _mamba_block(cfg, lp, x, c_i)
+            new_tail.append(nc)
+        if new_caches is not None:
+            new_caches["tail"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_tail
+            )
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return constrain(logits, "batch", None, "vocab"), new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ng, per, tail = structure(cfg)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // HEAD_P
+    K = cfg.ssm_conv
+    conv_c = d_inner
+
+    def mamba_cache(n):
+        return {
+            "conv": jnp.zeros((n, batch, K - 1, conv_c), dtype),
+            "ssm": jnp.zeros((n, batch, H, cfg.ssm_state, HEAD_P), jnp.float32),
+        }
+
+    cache = {
+        "groups": {
+            "attn": {
+                "k": jnp.zeros((ng, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((ng, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "pos": jnp.zeros((ng,), jnp.int32),
+            },
+            "mamba": jax.tree_util.tree_map(
+                lambda x: x.reshape(ng, per, *x.shape[1:]), mamba_cache(ng * per)
+            ),
+        },
+    }
+    if tail:
+        cache["tail"] = mamba_cache(tail)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    ng, per, tail = structure(cfg)
+    mamba_spec = {
+        "conv": (None, None, "batch", None, None),
+        "ssm": (None, None, "batch", None, "state", None),
+    }
+    spec = {
+        "groups": {
+            "attn": {
+                "k": (None, "batch", "kv_seq", None, "kv_hd"),
+                "v": (None, "batch", "kv_seq", None, "kv_hd"),
+                "pos": (None,),
+            },
+            "mamba": mamba_spec,
+        },
+    }
+    if tail:
+        spec["tail"] = {
+            "conv": (None, "batch", None, None),
+            "ssm": (None, "batch", None, "state", None),
+        }
+    return spec

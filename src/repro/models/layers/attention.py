@@ -1,0 +1,188 @@
+"""GQA attention with blockwise (flash-style) softmax, SWA / local-global
+masks, cross-attention, and a KV-cache decode path.
+
+The blockwise formulation (online softmax over KV blocks, fp32 running
+max/sum) never materialises the full (Sq × Skv) score matrix, which is what
+lets the prefill_32k shapes fit HBM.  Causal block *skipping* (not just
+masking) is left to the perf pass — see EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers.common import apply_rope, he_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int) -> Dict:
+    ks = jax.random.split(key, 3)
+    # q and fused kv: two column-parallel matmuls -> two (not three)
+    # boundary cotangents (perf iteration A3).  kv stays fused because its
+    # k/v midpoint split is ALWAYS shard-aligned (2·kv_dim/16 divides
+    # kv_dim); fusing q in as well puts the q/k boundary at q_dim, which is
+    # NOT shard-aligned for most archs and forces GSPMD to gather the whole
+    # projection (perf iteration A8, EXPERIMENTS §Perf).
+    return {
+        "wq": he_init(ks[0], (d_model, num_heads * head_dim), d_model),
+        "wkv": he_init(ks[1], (d_model, 2 * num_kv_heads * head_dim), d_model),
+        "wo": he_init(ks[2], (num_heads * head_dim, d_model), num_heads * head_dim),
+    }
+
+
+def _mask(qi, kj, causal: bool, window: int, kv_valid: Optional[jnp.ndarray]):
+    """qi: (qb,), kj: (kb,) global indices -> (qb, kb) additive mask."""
+    m = jnp.zeros((qi.shape[0], kj.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(kj[None, :] > qi[:, None], NEG_INF, m)
+    if window > 0:
+        m = jnp.where(qi[:, None] - kj[None, :] >= window, NEG_INF, m)
+    if kv_valid is not None:
+        m = jnp.where(kj[None, :] >= kv_valid, NEG_INF, m)
+    return m
+
+
+def flash_attention(
+    q: jnp.ndarray,              # (B, Sq, H, D)
+    k: jnp.ndarray,              # (B, Skv, Hkv, D)
+    v: jnp.ndarray,              # (B, Skv, Hkv, D)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jnp.ndarray = 0,
+    kv_valid: Optional[jnp.ndarray] = None,   # scalar: #valid cache slots
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    # pad to block multiples
+    Sq_p, Skv_p = -(-Sq // qb) * qb, -(-Skv // kb) * kb
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        kv_valid = jnp.asarray(Skv if kv_valid is None else kv_valid)
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    nq, nk = Sq_p // qb, Skv_p // kb
+
+    qg = q.reshape(B, nq, qb, Hkv, G, D)
+    kg = k.reshape(B, nk, kb, Hkv, D)
+    vg = v.reshape(B, nk, kb, Hkv, D)
+
+    def q_step(_, qi_blk):
+        qblk, qidx = qi_blk                       # (B, qb, Hkv, G, D), scalar
+        qi = q_offset + qidx * qb + jnp.arange(qb)
+
+        def kv_step(carry, kv_blk):
+            m_run, l_run, acc = carry
+            kblk, vblk, kidx = kv_blk
+            kj = kidx * kb + jnp.arange(kb)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = s + _mask(qi, kj, causal, window, kv_valid)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            # probabilities in bf16 after the stabilised subtraction: halves
+            # the dominant S²-proportional HBM traffic of unfused attention
+            # (perf iteration A3, EXPERIMENTS §Perf); the running max/sum
+            # stay f32 so the softmax remains numerically exact
+            p = jnp.exp((s - m_new[..., None]).astype(vblk.dtype))
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.astype(jnp.float32).sum(-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        init = (
+            jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, qb), jnp.float32),
+            jnp.zeros((B, Hkv, G, qb, D), jnp.float32),
+        )
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l_run[..., None], 1e-20)
+        return None, jnp.transpose(out, (0, 3, 1, 2, 4))   # (B, qb, Hkv, G, D)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qg, 1, 0), jnp.arange(nq))
+    )                                               # (nq, B, qb, Hkv, G, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq_p, H, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def attention_layer(
+    p: Dict,
+    x: jnp.ndarray,                       # (B, S, d)
+    positions: jnp.ndarray,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[Dict] = None,         # {"k","v": (B, Smax, Hkv, D), "pos"}
+    memory: Optional[jnp.ndarray] = None, # cross-attention memory (B, Sm, d)
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    kv_src = memory if memory is not None else x
+    Skv = kv_src.shape[1]
+    q = x @ p["wq"]
+    k, v = jnp.split(kv_src @ p["wkv"], 2, axis=-1)
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, Skv, num_kv_heads, head_dim)
+    v = v.reshape(B, Skv, num_kv_heads, head_dim)
+
+    if memory is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    kv_valid = None
+    q_offset = 0
+    new_cache = None
+    ring = False
+    if cache is not None:
+        pos = cache["pos"]                                   # scalar int32
+        cdt = cache["k"].dtype
+        L = cache["k"].shape[1]
+        # SWA ring buffer (decoder.cache_len): cache shorter than the
+        # context -> write at pos % L; every live slot is inside the
+        # window by construction, so no positional masking is needed
+        ring = window > 0 and L <= window and S == 1
+        slot = pos % L if ring else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cdt), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cdt), slot, axis=1)
+        k, v = ck, cv
+        kv_valid = jnp.minimum(pos + S, L) if ring else pos + S
+        q_offset = pos
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+
+    out = flash_attention(
+        q, k, v,
+        causal=causal and memory is None and not ring,
+        window=0 if ring else window,
+        q_offset=0 if ring else q_offset,
+        kv_valid=kv_valid,
+    )
+    out = out.reshape(B, S, num_heads * head_dim) @ p["wo"]
+    # reduce-scatter back to the sequence-sharded boundary (Megatron-SP)
+    out = constrain(out, "batch", "seq_shard", None)
+    return out, new_cache

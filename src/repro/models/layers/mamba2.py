@@ -1,0 +1,95 @@
+"""Mamba2 block (used by zamba2) built on the shared SSD core.
+
+Simplifications vs. the CUDA reference (noted in DESIGN.md): one B/C group
+(ngroups=1), no internal RMSNorm-gating variant (we use post-SSD gated norm),
+depthwise short conv width 4.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import he_init, rmsnorm, rmsnorm_init
+from repro.models.layers.ssd import ssd_scan, ssd_step
+
+HEAD_P = 64    # mamba2 head channel dim
+
+
+def mamba2_init(key, d_model: int, d_state: int, expand: int = 2,
+                conv_width: int = 4) -> Dict:
+    d_inner = expand * d_model
+    H = d_inner // HEAD_P
+    ks = jax.random.split(key, 6)
+    # separate projections per component (z / x / B / C / dt) so each output
+    # is shard-aligned on its own — a fused in_proj's split boundaries cut
+    # across model-axis shards and force GSPMD to replicate the SSD scan
+    # (perf iteration H1, EXPERIMENTS §Perf); B/C/dt are small and stay
+    # replicated (below MIN_SHARD_DIM)
+    return {
+        "wz": he_init(ks[0], (d_model, d_inner), d_model),
+        "wx": he_init(ks[1], (d_model, d_inner), d_model),
+        "wb": he_init(ks[3], (d_model, d_state), d_model),
+        "wc": he_init(ks[4], (d_model, d_state), d_model),
+        "wdt": he_init(ks[5], (d_model, H), d_model) * 0.1,
+        "conv_w": he_init(ks[1], (conv_width, d_inner), conv_width) * 0.1,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),       # (H,)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": he_init(ks[2], (d_inner, d_model), d_inner),
+        "norm": rmsnorm_init(d_inner),
+    }
+
+
+def _short_conv(x: jnp.ndarray, w: jnp.ndarray,
+                cache: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Causal depthwise conv over S.  x: (B,S,C), w: (K,C).
+    cache: (B, K-1, C) trailing context for decode."""
+    K = w.shape[0]
+    if cache is not None:
+        x_ext = jnp.concatenate([cache, x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(x_ext[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_cache = x_ext[:, -(K - 1):]
+    return jax.nn.silu(out), new_cache
+
+
+def mamba2_layer(
+    p: Dict,
+    x: jnp.ndarray,                 # (B, S, d)
+    d_state: int,
+    expand: int = 2,
+    cache: Optional[Dict] = None,   # {"conv": (B,K-1,C), "ssm": (B,H,N,P)}
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    d_inner = expand * d
+    H = d_inner // HEAD_P
+
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    Bm = x @ p["wb"]
+    Cm = x @ p["wc"]
+    dt = x @ p["wdt"]
+    conv_cache = cache["conv"] if cache is not None else None
+    xs, new_conv = _short_conv(xs, p["conv_w"], conv_cache)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])             # (B,S,H)
+    A = -jnp.exp(p["A_log"])                            # (H,) negative
+    log_a = dt * A
+
+    xh = xs.reshape(B, S, H, HEAD_P)
+    if cache is not None:
+        y, new_ssm = ssd_step(
+            cache["ssm"], xh[:, 0], log_a[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0]
+        )
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd_scan(xh, log_a, dt, Bm, Cm)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    new_cache = {"conv": new_conv, "ssm": new_ssm} if cache is not None else None
+    return out, new_cache

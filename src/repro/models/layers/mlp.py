@@ -1,0 +1,48 @@
+"""Gated MLP with optional structured channel pruning (paper C1 applied to
+LM FFNs: pruning the shared d_ff dimension shrinks *both* the up/gate and the
+down matmuls — the dataflow-reorganization insight; DESIGN.md §4)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers.common import activation, he_init
+
+
+def mlp_init(key, d_model: int, d_ff: int) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": he_init(ks[0], (d_model, d_ff), d_model),
+        "wg": he_init(ks[1], (d_model, d_ff), d_model),
+        "wo": he_init(ks[2], (d_ff, d_model), d_ff),
+    }
+
+
+def mlp(p: Dict, x: jnp.ndarray, act: str = "silu",
+        kept_ff: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x: (B, S, d).  kept_ff: optional kept-channel indices (C1 pruning)."""
+    wi, wg, wo = p["wi"], p["wg"], p["wo"]
+    if kept_ff is not None:
+        wi = jnp.take(wi, kept_ff, axis=1)
+        wg = jnp.take(wg, kept_ff, axis=1)
+        wo = jnp.take(wo, kept_ff, axis=0)
+    # no sharding constraint on h: with x sequence-sharded and wg/wi
+    # column-sharded, h is doubly (seq × ffn) sharded with zero comms and
+    # the down-proj needs only an all-reduce of the seq-sharded output
+    # (perf iteration A1, EXPERIMENTS §Perf)
+    h = activation(act)(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def prune_mlp_channels(p: Dict, keep_frac: float) -> jnp.ndarray:
+    """Magnitude-based kept d_ff channels (paper C1 selection rule: keep the
+    channels with largest mean |W| across producer+consumer)."""
+    score = (
+        jnp.abs(p["wi"]).mean(0) + jnp.abs(p["wg"]).mean(0) + jnp.abs(p["wo"]).mean(1)
+    )
+    keep = max(1, int(round(score.shape[0] * keep_frac)))
+    idx = jnp.argsort(-score)[:keep]
+    return jnp.sort(idx)

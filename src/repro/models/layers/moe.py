@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity-based, per-example scatter dispatch.
+
+The dispatch is *sort-free*: each (token, choice) computes its slot inside
+its expert's capacity buffer with a cumulative sum over the one-hot routing
+mask — the same cumsum-compaction primitive as the paper's RFC encoder
+(position-of-nth-nonzero), applied to token→expert routing instead of
+channel banks (DESIGN.md §4).
+
+Dispatch is vmapped over the batch dim so every scatter/gather is LOCAL to
+the data shard that owns the example; the only cross-device movement is the
+(B-sharded → E-sharded) buffer reshard, which GSPMD lowers as an all-to-all
+— the standard expert-parallel exchange (perf iteration M1, EXPERIMENTS
+§Perf; the previous global-cumsum formulation lowered as per-layer
+all-reduces of the whole expert buffer).
+
+Experts are sharded over the mesh "model" axis; ``num_experts`` is padded so
+16 divides it (pad experts get −inf router logits and zero weights).
+Tokens over capacity are dropped (residual passes through).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers.common import activation, he_init
+
+
+def moe_init(key, d_model: int, moe_d_ff: int, num_experts: int,
+             padded_experts: int) -> Dict:
+    ks = jax.random.split(key, 4)
+    E = padded_experts
+    wi = he_init(ks[0], (E, d_model, moe_d_ff), d_model)
+    wg = he_init(ks[1], (E, d_model, moe_d_ff), d_model)
+    wo = he_init(ks[2], (E, moe_d_ff, d_model), moe_d_ff)
+    if E > num_experts:
+        mask = (jnp.arange(E) < num_experts).astype(wi.dtype)[:, None, None]
+        wi, wg, wo = wi * mask, wg * mask, wo * mask
+    return {
+        "router": he_init(ks[3], (d_model, E), d_model),
+        "wi": wi, "wg": wg, "wo": wo,
+    }
+
+
+def _dispatch_one(xt, expert_idx, keep, slot, E: int, cap: int):
+    """Per-example scatter: xt (T, d) -> buf (E, cap+1, d).
+
+    One scatter per routing choice (k is small and static) instead of a
+    single scatter of the 8×-repeated token tensor: the backward pass then
+    sums the k gather-cotangents locally BEFORE any cross-shard reduction
+    (perf iteration M2, EXPERIMENTS §Perf)."""
+    k = expert_idx.shape[-1]
+    sidx = jnp.where(keep, slot, cap)
+    buf = jnp.zeros((E, cap + 1, xt.shape[-1]), xt.dtype)
+    for j in range(k):
+        buf = buf.at[expert_idx[:, j], sidx[:, j]].add(xt)
+    return buf
+
+
+def _combine_one(out_buf, expert_idx, keep, slot, gates, cap: int):
+    """Per-example gather: out_buf (E, cap+1, d) -> (T, d)."""
+    T, k = expert_idx.shape
+    sidx = jnp.where(keep, slot, cap)
+    w = (gates * keep).astype(out_buf.dtype)
+    out = jnp.zeros((T, out_buf.shape[-1]), out_buf.dtype)
+    for j in range(k):
+        out = out + out_buf[expert_idx[:, j], sidx[:, j]] * w[:, j : j + 1]
+    return out
+
+
+def moe_ffn(
+    p: Dict,
+    x: jnp.ndarray,                  # (B, S, d)
+    *,
+    num_experts: int,                # real experts (pads masked out)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux load-balancing loss)."""
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    cap = max(1, int(top_k * S * capacity_factor / E))
+
+    logits = (x @ p["router"]).astype(jnp.float32)             # (B, S, E)
+    logits = jnp.where(jnp.arange(E) < num_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # RFC-style cumsum compaction, per example: slot of each (token, choice)
+    # = number of earlier assignments to the same expert within the example
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (B, S, k, E)
+    flat = onehot.reshape(B, S * top_k, E)
+    slot = jnp.cumsum(flat, axis=1) - flat
+    slot = (slot * flat).sum(-1).reshape(B, S, top_k)          # (B, S, k)
+    keep = slot < cap
+
+    buf = jax.vmap(
+        lambda xt, ei, ke, sl: _dispatch_one(xt, ei, ke, sl, E, cap)
+    )(x, expert_idx, keep, slot)                               # (B, E, cap+1, d)
+    # B-sharded -> E-sharded exchange (the EP all-to-all)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    h = activation(act)(jnp.einsum("becd,edf->becf", buf, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", buf, p["wi"])
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out_buf = constrain(out_buf, "batch", "expert", None, None)
+
+    out = jax.vmap(
+        lambda ob, ei, ke, sl, gv: _combine_one(ob, ei, ke, sl, gv, cap)
+    )(out_buf, expert_idx, keep, slot, gate_vals)              # (B, S, d)
+    out = constrain(out, "batch", None, None)
+
+    # load-balance aux loss (Switch-style)
+    pe = probs.reshape(-1, E)
+    me = pe.mean(0)
+    ce = onehot.reshape(-1, top_k, E).sum(1).astype(jnp.float32).mean(0) \
+        * E / top_k
+    aux = (me * ce).sum() * num_experts / E
+    return out, aux

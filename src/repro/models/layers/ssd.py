@@ -1,0 +1,148 @@
+"""Chunked SSD (state-space duality) core — shared by Mamba2 (zamba2) and
+mLSTM (xlstm), which are both "gated linear attention with decay":
+
+    S_t = a_t · S_{t-1} + dt_t · B_t ⊗ x_t          (state: H × N × P)
+    y_t = C_t · S_t
+
+The chunkwise algorithm computes intra-chunk interactions as a masked
+attention-like matmul (MXU-friendly) and carries inter-chunk state with a
+short lax.scan — O(S·L) work instead of O(S²), which is what makes the
+long_500k shapes lowerable for the SSM/hybrid archs.
+
+Heads are independent, so for wide models the scan runs over head *groups*
+(lax.map) to bound the (L×L) decay-mask working set — the VMEM-tiling
+argument of the paper's bank storage applied to the sequence dimension.
+
+mLSTM is realised by mapping (v, k, q, i, f) -> (x, B, C, dt, a) and
+augmenting x with a ones-column so the same kernel also produces the
+normalizer n·q (see repro.models.layers.xlstm).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 128
+# Head-group batching (lax.map over groups) is DISABLED by default: the
+# heads axis is model-sharded in production, which already bounds the
+# (L×L×H_local) intra-chunk working set, and a group size that does not
+# equal the per-shard head count forces GSPMD to gather all heads and
+# replicate the scan (perf iteration H1, EXPERIMENTS §Perf).
+HEAD_GROUP = 0
+
+
+def _ssd_core(x, log_a, dt, Bm, Cm, init_state, chunk):
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+
+    xc = x.reshape(Bsz, nc, L, H, P)
+    lac = log_a.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    cum = jnp.cumsum(lac, axis=2)                       # (B, nc, L, H)
+    total = cum[:, :, -1]                               # (B, nc, H)
+
+    # --- intra-chunk (attention-like, causal with decay mask) ---
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: exp of the (positive) upper triangle overflows and
+    # 0*inf = NaN poisons the cotangent of the where
+    diff = jnp.where(causal[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    cb = jnp.einsum("bnie,bnje->bnij", Cc, Bc)          # (B,nc,L,L)
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]   # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w.astype(x.dtype), xc)
+
+    # --- chunk summary states ---
+    sdec = jnp.exp(total[:, :, None, :] - cum) * dtc    # (B,nc,L,H)
+    states = jnp.einsum("bnlh,bnle,bnlhp->bnhep", sdec.astype(x.dtype), Bc, xc)
+
+    # --- inter-chunk scan ---
+    s0 = (
+        jnp.zeros((Bsz, H, N, P), jnp.float32)
+        if init_state is None else init_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        st, tot = inp                                   # (B,H,N,P), (B,H)
+        new = s * jnp.exp(tot)[:, :, None, None] + st.astype(jnp.float32)
+        return new, s
+
+    final, prevs = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    prevs = jnp.moveaxis(prevs, 0, 1)                   # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum(
+        "bnle,bnlh,bnhep->bnlhp",
+        Cc, jnp.exp(cum).astype(x.dtype), prevs.astype(x.dtype),
+    )
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, final
+
+
+def ssd_scan(
+    x: jnp.ndarray,        # (B, S, H, P)
+    log_a: jnp.ndarray,    # (B, S, H)   per-step log decay (<= 0)
+    dt: jnp.ndarray,       # (B, S, H)   input scale (>= 0)
+    Bm: jnp.ndarray,       # (B, S, N)   input proj (shared across heads)
+    Cm: jnp.ndarray,       # (B, S, N)   output proj
+    init_state: Optional[jnp.ndarray] = None,   # (B, H, N, P)
+    chunk: int = DEFAULT_CHUNK,
+    head_group: int = HEAD_GROUP,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if not head_group or H <= head_group or H % head_group:
+        return _ssd_core(x, log_a, dt, Bm, Cm, init_state, chunk)
+
+    ng = H // head_group
+    xg = jnp.moveaxis(x.reshape(Bsz, S, ng, head_group, P), 2, 0)
+    lag = jnp.moveaxis(log_a.reshape(Bsz, S, ng, head_group), 2, 0)
+    dtg = jnp.moveaxis(dt.reshape(Bsz, S, ng, head_group), 2, 0)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    sg = jnp.moveaxis(init_state.reshape(Bsz, ng, head_group, N, P), 1, 0)
+
+    def f(args):
+        xi, lai, dti, si = args
+        return _ssd_core(xi, lai, dti, Bm, Cm, si, chunk)
+
+    ys, finals = jax.lax.map(f, (xg, lag, dtg, sg))
+    y = jnp.moveaxis(ys, 0, 2).reshape(Bsz, S, H, P)
+    final = jnp.moveaxis(finals, 0, 1).reshape(Bsz, H, N, P)
+    return y, final
+
+
+def ssd_step(
+    state: jnp.ndarray,    # (B, H, N, P)
+    x: jnp.ndarray,        # (B, H, P)
+    log_a: jnp.ndarray,    # (B, H)
+    dt: jnp.ndarray,       # (B, H)
+    Bm: jnp.ndarray,       # (B, N)
+    Cm: jnp.ndarray,       # (B, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  Returns (y (B,H,P), new_state (B,H,N,P))."""
+    s = state * jnp.exp(log_a.astype(jnp.float32))[:, :, None, None]
+    s = s + jnp.einsum(
+        "bh,be,bhp->bhep", dt.astype(jnp.float32), Bm.astype(jnp.float32),
+        x.astype(jnp.float32),
+    )
+    y = jnp.einsum("be,bhep->bhp", Cm.astype(jnp.float32), s)
+    return y.astype(x.dtype), s

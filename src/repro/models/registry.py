@@ -1,0 +1,142 @@
+"""Family dispatch: one uniform API over every architecture family.
+
+    init_params(cfg, key, dtype)        -> params pytree
+    loss_fn(params, batch, cfg)         -> (loss, metrics) — training forward
+    serve_fn(params, batch, cache, cfg) -> (logits, new_cache) — decode step
+    init_cache(cfg, batch, max_len)     -> cache pytree
+    cache_specs(cfg)                    -> logical-axis tree matching cache
+
+Batch dicts by family:
+    dense/moe:  {tokens (B,S), labels (B,S)}
+    vlm:        {tokens (B,S_text), image_embeds (B,N_img,d), labels (B,S_text)}
+    audio:      {frames (B,F,d), tokens (B,S), labels (B,S)}
+    ssm/hybrid: {tokens, labels}
+    gcn:        {x (N,T,V,C), labels (N,)}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core.agcn import model as agcn
+from repro.models import decoder, encdec, hybrid, ssm_model
+
+LM_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid", "audio")
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return decoder.init_params(cfg, key, dtype)
+    if cfg.family == "audio":
+        return encdec.init_params(cfg, key, dtype)
+    if cfg.family == "ssm":
+        return ssm_model.init_params(cfg, key, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.init_params(cfg, key, dtype)
+    if cfg.family == "gcn":
+        p = agcn.init_params(cfg, key)
+        return jax.tree_util.tree_map(lambda x: x.astype(dtype), p)
+    raise ValueError(cfg.family)
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (logz - gold).mean()
+    zloss = 1e-4 * jnp.square(logz).mean()          # logit drift regulariser
+    return loss + zloss
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            inference: bool = False
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if cfg.family == "gcn":
+        plan = None
+        if inference:                      # paper prunes the deployed model;
+            from repro.core.pruning.plan import plan_from_config
+            plan = plan_from_config(cfg)   # training runs the dense graph
+        logits = agcn.forward(params, batch["x"], cfg, plan=plan)
+        loss = _xent(logits, batch["labels"], cfg.gcn_num_classes)
+        acc = (logits.argmax(-1) == batch["labels"]).mean()
+        return loss, {"loss": loss, "acc": acc}
+
+    if cfg.family == "audio":
+        memory = encdec.encode(params, batch["frames"], cfg)
+        logits, _ = encdec.decode(params, batch["tokens"], memory, cfg)
+        aux = jnp.zeros(())
+    elif cfg.family in ("dense", "moe", "vlm"):
+        logits, _, aux = decoder.forward(
+            params, batch["tokens"], cfg,
+            image_embeds=batch.get("image_embeds"),
+        )
+        if cfg.family == "vlm":
+            logits = logits[:, -batch["tokens"].shape[1]:]   # text positions
+    elif cfg.family == "ssm":
+        logits, _ = ssm_model.forward(params, batch["tokens"], cfg)
+        aux = jnp.zeros(())
+    elif cfg.family == "hybrid":
+        logits, _ = hybrid.forward(params, batch["tokens"], cfg)
+        aux = jnp.zeros(())
+    else:
+        raise ValueError(cfg.family)
+
+    loss = _xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab_size)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def serve_fn(params, batch: Dict[str, jnp.ndarray], cache, cfg: ModelConfig
+             ) -> Tuple[jnp.ndarray, Any]:
+    """One decode step: batch = {tokens (B,1), pos scalar int32, [memory]}."""
+    pos = batch["pos"]
+    positions = pos + jnp.arange(batch["tokens"].shape[1])
+    if cfg.family in ("dense", "moe", "vlm"):
+        logits, new_cache, _ = decoder.forward(
+            params, batch["tokens"], cfg, caches=cache, positions=positions,
+        )
+        return logits, new_cache
+    if cfg.family == "audio":
+        return encdec.decode(
+            params, batch["tokens"], batch["memory"], cfg, caches=cache,
+            positions=positions,
+        )
+    if cfg.family == "ssm":
+        return ssm_model.forward(params, batch["tokens"], cfg, caches=cache,
+                                 positions=positions)
+    if cfg.family == "hybrid":
+        return hybrid.forward(params, batch["tokens"], cfg, caches=cache,
+                              positions=positions)
+    raise ValueError(f"no serve path for family {cfg.family}")
+
+
+def prefill_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Prefill forward (logits only — cache writing exercised by serve_fn)."""
+    return loss_fn(params, batch, cfg)[0] if "labels" in batch else None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return decoder.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return ssm_model.init_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_len, dtype)
+    raise ValueError(cfg.family)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return decoder.cache_specs(cfg)
+    if cfg.family == "audio":
+        return encdec.cache_specs(cfg)
+    if cfg.family == "ssm":
+        return ssm_model.cache_specs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.cache_specs(cfg)
+    raise ValueError(cfg.family)

@@ -1,0 +1,165 @@
+"""xLSTM language model (xlstm-1.3b): mLSTM blocks with periodic sLSTM
+blocks (ratio cfg.slstm_every, xLSTM[7:1] for the 1.3B config), each
+followed by a gated MLP.  Scan groups hold one pattern period.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers.common import he_init, rmsnorm, rmsnorm_init
+from repro.models.layers.mlp import mlp, mlp_init
+from repro.models.layers.xlstm import (
+    mlstm_init, mlstm_layer, slstm_init, slstm_layer,
+)
+
+
+def group_size(cfg: ModelConfig) -> int:
+    return cfg.slstm_every if cfg.slstm_every > 0 else cfg.scan_group
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    g = group_size(cfg)
+    assert cfg.num_layers % g == 0
+    return cfg.num_layers // g
+
+
+def _mlstm_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln": rmsnorm_init(cfg.d_model),
+        "cell": mlstm_init(k1, cfg.d_model, cfg.num_heads, cfg.ssm_expand),
+    }
+    if cfg.d_ff:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _slstm_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln": rmsnorm_init(cfg.d_model),
+        "cell": slstm_init(k1, cfg.d_model, cfg.num_heads),
+    }
+    if cfg.d_ff:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Dict:
+    g, ng = group_size(cfg), num_groups(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 1)
+
+    def group(gi):
+        # layers 0..g-2 are mLSTM, layer g-1 is sLSTM (xLSTM[g-1 : 1])
+        m = [_mlstm_block_init(keys[gi * g + i], cfg) for i in range(g - 1)]
+        s = _slstm_block_init(keys[gi * g + g - 1], cfg)
+        return {
+            "mlstm": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *m),
+            "slstm": s,
+        }
+
+    groups = [group(gi) for gi in range(ng)]
+    params = {
+        "embed": he_init(keys[-1], (cfg.padded_vocab, cfg.d_model), cfg.d_model),
+        "layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), params)
+
+
+def _apply_mlstm(cfg, lp, x, cache):
+    h, new_c = mlstm_layer(
+        lp["cell"], rmsnorm(x, lp["ln"], cfg.norm_eps), cfg.num_heads,
+        cfg.ssm_expand, cache,
+    )
+    x = x + h
+    if "mlp" in lp:
+        x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg.act)
+    return x, new_c
+
+
+def _apply_slstm(cfg, lp, x, cache):
+    h, new_c = slstm_layer(
+        lp["cell"], rmsnorm(x, lp["ln"], cfg.norm_eps), cfg.num_heads, cache,
+    )
+    x = x + h
+    if "mlp" in lp:
+        x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg.act)
+    return x, new_c
+
+
+def forward(
+    params: Dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    caches: Optional[Any] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Any]]:
+    g = group_size(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0) * np.sqrt(cfg.d_model)
+    x = constrain(x, "batch", "seq_shard", None)
+
+    def body(h, inp):
+        if caches is None:
+            gp, cache = inp, None
+        else:
+            gp, cache = inp
+        new_m, new_s = [], None
+        for i in range(g - 1):
+            lp = jax.tree_util.tree_map(lambda a: a[i], gp["mlstm"])
+            c_i = (
+                jax.tree_util.tree_map(lambda a: a[i], cache["mlstm"])
+                if cache is not None else None
+            )
+            h, nc = _apply_mlstm(cfg, lp, h, c_i)
+            new_m.append(nc)
+        c_s = cache["slstm"] if cache is not None else None
+        h, new_s = _apply_slstm(cfg, gp["slstm"], h, c_s)
+        h = constrain(h, "batch", "seq_shard", None)
+        if cache is None:
+            return h, None
+        return h, {
+            "mlstm": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m),
+            "slstm": new_s,
+        }
+
+    if caches is None:
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+        new_caches = None
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return constrain(logits, "batch", None, "vocab"), new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    g, ng = group_size(cfg), num_groups(cfg)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dh = d_inner // cfg.num_heads
+    dh_s = cfg.d_model // cfg.num_heads
+    def zeros():
+        return jnp.zeros((ng, batch, cfg.num_heads, dh_s), jnp.float32)
+    return {
+        "mlstm": {
+            "ssm": jnp.zeros((ng, g - 1, batch, cfg.num_heads, dh, dh + 1),
+                             jnp.float32),
+        },
+        "slstm": {"c": zeros(), "n": zeros(), "h": zeros(), "m": zeros()},
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    return {
+        "mlstm": {"ssm": (None, None, "batch", None, "state", None)},
+        "slstm": {k: (None, "batch", None, None) for k in ("c", "n", "h", "m")},
+    }

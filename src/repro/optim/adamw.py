@@ -1,0 +1,89 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule.
+
+Optimizer moments are stored fp32 and inherit the parameters' 2D (model ×
+data) sharding, i.e. ZeRO-style fully sharded states.  The update is pure
+(params, state, grads) -> (params, state) so jit donation works.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+
+def schedule(step: jnp.ndarray, tcfg: TrainConfig) -> jnp.ndarray:
+    warm = tcfg.learning_rate * (step + 1) / max(1, tcfg.warmup_steps)
+    t = jnp.clip(
+        (step - tcfg.warmup_steps)
+        / max(1, tcfg.total_steps - tcfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = tcfg.learning_rate * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < tcfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+def update(
+    params, grads, state: OptState, tcfg: TrainConfig
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    lr = schedule(state.step, tcfg)
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    t = state.step + 1
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / (1 - b1 ** t.astype(jnp.float32))
+        vhat = v / (1 - b2 ** t.astype(jnp.float32))
+        step_ = mhat / (jnp.sqrt(vhat) + 1e-8)
+        if p.ndim >= 2:                                  # decoupled decay
+            step_ = step_ + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(
+        lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_m = jax.tree_util.tree_map(
+        lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_v = jax.tree_util.tree_map(
+        lambda x: x[2], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=t, m=new_m, v=new_v), metrics

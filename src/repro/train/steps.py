@@ -1,0 +1,94 @@
+"""Step-function factories: train_step (fwd+bwd+AdamW, optional gradient
+accumulation over microbatches) and serve_step (one decode token against a
+KV cache, cache donated)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.models import registry
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss(params, batch):
+        return registry.loss_fn(params, batch, cfg)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    grad_shardings=None) -> Callable:
+    """grad_shardings: optional sharding tree applied to the gradients before
+    the optimizer update — lets XLA reduce-scatter the data-parallel grad
+    sync straight into the (2D-sharded) moment update instead of
+    all-reducing full gradients (ZeRO-2)."""
+    loss_fn = make_loss_fn(cfg)
+    nmb = max(1, tcfg.microbatches)
+
+    def train_step(params, opt_state, batch):
+        if nmb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def mb(carry, mb_batch):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb_batch)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                if grad_shardings is not None:
+                    # keep the accumulator 2D-sharded: each microbatch's
+                    # grad sync lowers as a reduce-scatter into the shard
+                    gacc = jax.lax.with_sharding_constraint(
+                        gacc, grad_shardings)
+                return (gacc, lacc + l), None
+
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if grad_shardings is not None:
+                zeros = jax.lax.with_sharding_constraint(zeros, grad_shardings)
+            (grads, loss), _ = jax.lax.scan(mb, (zeros, jnp.zeros(())), split)
+            grads = jax.tree_util.tree_map(lambda g: g / nmb, grads)
+            loss = loss / nmb
+            metrics = {"loss": loss}
+        if tcfg.grad_compression == "bf16":
+            # compress before the DP sync: the reduce happens on bf16
+            # payloads (half the collective bytes); AdamW accumulates its
+            # moments in f32 regardless
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16), grads)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, opt_metrics = adamw.update(
+            params, grads, opt_state, tcfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, new_cache = registry.serve_fn(params, batch, cache, cfg)
+        # greedy next token (sampling handled by the serving loop)
+        next_tok = jnp.argmax(logits[:, -1, : cfg.padded_vocab], axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """Forward pass producing logits only (the prefill_32k cells)."""
+    def prefill_step(params, batch):
+        loss, metrics = registry.loss_fn(params, batch, cfg, inference=True)
+        return metrics
+
+    return prefill_step

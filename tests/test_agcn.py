@@ -1,0 +1,102 @@
+"""2s-AGCN model tests: shapes, pruning consistency, quantization, C_k,
+input-skip, bone stream, feature sparsity probe."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.configs import get_config
+from repro.core.agcn import model as M
+from repro.core.agcn.graph import build_ntu_subsets, graph_sparsity
+from repro.core.pruning.plan import build_prune_plan
+
+CFG = get_config("agcn-2s", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (4, CFG.gcn_frames, 25, 3))
+
+
+def test_static_graph_properties():
+    A = build_ntu_subsets()
+    assert A.shape == (3, 25, 25)
+    # column-normalized D^-1·A: each column of the merged graph sums to 1
+    merged = A.sum(0)
+    np.testing.assert_allclose(merged.sum(0), np.ones(25), atol=1e-5)
+    assert graph_sparsity(A) > 0.8                 # A_k sparse (paper §I)
+
+
+def test_forward_shapes(params, x):
+    logits = M.forward(params, x, CFG)
+    assert logits.shape == (4, CFG.gcn_num_classes)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_full_keep_plan_matches_dense(params, x):
+    """keep_frac=1 + no cavity = numerically identical to dense forward."""
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    plan = build_prune_plan(sw, CFG.gcn_channels, [1.0] * 4, "none",
+                            input_skip=1)
+    dense = M.forward(params, x, dataclasses.replace(CFG, input_skip=1))
+    pruned = M.forward(params, x, dataclasses.replace(CFG, input_skip=1),
+                       plan=plan)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(pruned),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pruned_plan_reduces_and_runs(params, x):
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    plan = build_prune_plan(sw, CFG.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                            "cav-70-1", input_skip=2)
+    logits = M.forward(params, x, CFG, plan=plan)
+    assert logits.shape == (4, CFG.gcn_num_classes)
+    assert not bool(jnp.isnan(logits).any())
+    s = plan.summary(CFG.gcn_channels, 3)
+    assert s["compression_ratio"] > 2.0
+    assert s["graph_skip_efficiency"] > 0.3
+
+
+def test_quantization_small_error(params, x):
+    a = M.forward(params, x, CFG)
+    b = M.forward(params, x, CFG, quant=True)
+    rel = float(jnp.abs(a - b).mean() / (jnp.abs(a).mean() + 1e-9))
+    assert rel < 0.1                              # Q8.8: negligible loss
+
+
+def test_ck_path(x):
+    cfg = dataclasses.replace(CFG, use_ck=True)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    logits = M.forward(p, x, cfg)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_input_skip_halves_frames(params, x):
+    cfg2 = dataclasses.replace(CFG, input_skip=2)
+    # runs and differs from non-skipped
+    a = M.forward(params, x, dataclasses.replace(CFG, input_skip=1))
+    b = M.forward(params, x, cfg2)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_bone_stream_and_ensemble(params, x):
+    pb = M.init_params(CFG, jax.random.PRNGKey(7))
+    bones = M.bone_stream(x)
+    assert bones.shape == x.shape
+    ens = M.two_stream_logits(params, pb, x, CFG)
+    assert ens.shape == (4, CFG.gcn_num_classes)
+
+
+def test_feature_sparsity_probe(params, x):
+    s = M.feature_sparsity_per_block(params, x, CFG)
+    assert len(s) == len(CFG.gcn_channels)
+    assert all(0.0 <= v <= 1.0 for v in s)
+    assert any(v > 0.1 for v in s)                # ReLU produces real zeros

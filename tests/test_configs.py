@@ -1,0 +1,98 @@
+"""Config-registry and input-spec invariants for all assigned archs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import GCN_SHAPES, SHAPES
+from repro.configs import (
+    ASSIGNED, CONFIGS, applicable_shapes, get_config, input_specs,
+    shape_applicable, sub_quadratic,
+)
+
+EXPECTED_ARCHS = {
+    "h2o-danube-1.8b", "gemma3-12b", "internlm2-20b", "smollm-360m",
+    "whisper-small", "llava-next-mistral-7b", "qwen3-moe-30b-a3b",
+    "granite-moe-3b-a800m", "xlstm-1.3b", "zamba2-7b", "agcn-2s",
+}
+
+
+def test_registry_complete():
+    assert set(CONFIGS) == EXPECTED_ARCHS
+    assert len(ASSIGNED) == 10
+
+
+def test_get_config_accepts_underscores():
+    assert get_config("h2o_danube_1_8b").name == "h2o-danube-1.8b"
+    with pytest.raises(KeyError):
+        get_config("not-an-arch")
+
+
+def test_long500k_applicability_matches_spec():
+    """Spec: run long_500k for SSM/hybrid/SWA/local-global; skip for pure
+    full attention."""
+    runs = {a for a in ASSIGNED if shape_applicable(get_config(a), "long_500k")[0]}
+    assert runs == {"h2o-danube-1.8b", "gemma3-12b", "xlstm-1.3b", "zamba2-7b"}
+
+
+def test_40_cells_accounted():
+    """10 archs × 4 shapes = 40 cells: every cell is either applicable or
+    has a recorded skip reason."""
+    total = 0
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, reason = shape_applicable(cfg, s)
+            assert ok or reason
+            total += 1
+    assert total == 40
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_well_formed(arch, shape):
+    cfg = get_config(arch)
+    ok, _ = shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("inapplicable cell")
+    batch, axes = input_specs(cfg, shape)
+    assert set(batch) == set(axes)
+    shp = SHAPES[shape]
+    for name, sds in batch.items():
+        assert len(axes[name]) == len(sds.shape), name
+        if name == "tokens":
+            assert sds.shape[0] == shp.global_batch
+            assert sds.dtype == jnp.int32
+    if shp.is_decode:
+        assert batch["tokens"].shape[1] == 1
+        assert "pos" in batch
+    elif cfg.family == "vlm":
+        assert (batch["tokens"].shape[1] + cfg.num_image_tokens
+                == shp.seq_len)
+
+
+def test_gcn_shapes():
+    cfg = get_config("agcn-2s")
+    assert applicable_shapes(cfg) == list(GCN_SHAPES)
+    batch, axes = input_specs(cfg, "gcn_train")
+    n = GCN_SHAPES["gcn_train"].global_batch * cfg.gcn_persons
+    assert batch["x"].shape == (n, cfg.gcn_frames, 25, 3)
+
+
+def test_head_dim_kv_divisibility_for_mesh():
+    """kv head_dim (cache 'kv_hd' rule) must divide by 16 for every arch —
+    the invariant behind the decode-cell shardings."""
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        if cfg.num_kv_heads:
+            assert cfg.head_dim % 16 == 0 or cfg.head_dim % 16 in (0,) or \
+                cfg.head_dim * cfg.num_kv_heads % 16 == 0, a
+        # fused qkv flat dim divisible too
+        flat = (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+        if flat:
+            assert flat % 16 == 0, a
+
+
+def test_padded_sizes():
+    assert get_config("granite-moe-3b-a800m").padded_experts == 48
+    assert get_config("whisper-small").padded_vocab % 256 == 0
+    assert get_config("gemma3-12b").padded_vocab == 262144

@@ -1,0 +1,108 @@
+"""Hybrid-pruning plan tests: cavity balance invariants (hypothesis),
+magnitude channel selection, coarse/fine plan accounting vs paper claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pruning.cavity import balance_stats, cavity_pattern, tile_pattern
+from repro.core.pruning.plan import (
+    build_prune_plan, cavity_report, drop_scheme, select_channels_by_magnitude,
+    unstructured_prune,
+)
+
+
+@given(st.integers(30, 85), st.integers(1, 2))
+@settings(max_examples=40, deadline=None)
+def test_cavity_keep_fraction(percent, variant):
+    m = cavity_pattern(f"cav-{percent}-{variant}")
+    keep = 1 - percent / 100
+    assert abs(m.mean() - keep) < 2 / 72 + 1e-9      # rounding slack
+
+
+@given(st.integers(30, 85))
+@settings(max_examples=40, deadline=None)
+def test_variant1_balanced_variant2_not(percent):
+    b1 = balance_stats(cavity_pattern(f"cav-{percent}-1"))
+    assert b1["balanced"], b1
+    # paper: balanced patterns keep every position 2-3x in a cav-70 loop
+    if percent == 70:
+        assert b1["per_position_min"] >= 2
+        assert b1["per_position_max"] <= 3
+
+
+def test_cav70_2_unbalanced():
+    b2 = balance_stats(cavity_pattern("cav-70-2"))
+    assert not b2["balanced"]
+    # paper: positions kept 1x..4x instead of 2-3x
+    assert b2["per_position_max"] - b2["per_position_min"] >= 3
+
+
+def test_magnitude_selection_keeps_biggest():
+    w = np.zeros((3, 8, 4))
+    w[:, 2] = 10.0
+    w[:, 5] = 5.0
+    kept = select_channels_by_magnitude(w, 0.25)
+    assert kept == (2, 5)
+
+
+def test_unstructured_prune_fraction():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 64))
+    out = unstructured_prune(w, 0.7)
+    assert abs((out == 0).mean() - 0.7) < 0.02
+
+
+def _plan(keep_fracs, channels=(8, 8, 16, 16), cavity="cav-70-1"):
+    rng = np.random.default_rng(0)
+    cin = 3
+    sw = []
+    for cout in channels:
+        sw.append(rng.standard_normal((3, cin, cout)).astype(np.float32))
+        cin = cout
+    return build_prune_plan(sw, channels, keep_fracs, cavity), channels
+
+
+def test_plan_neighbour_connection():
+    """Coarse temporal pruning = next block's kept input channels (Fig. 2)."""
+    plan, channels = _plan([1.0, 0.5, 0.5, 0.5])
+    for b in range(len(channels) - 1):
+        assert plan.blocks[b].kept_filters == plan.blocks[b + 1].kept_in
+    # last block keeps all filters
+    assert len(plan.blocks[-1].kept_filters) == channels[-1]
+
+
+def test_plan_block0_never_pruned():
+    plan, _ = _plan([0.1, 0.5, 0.5, 0.5])
+    assert len(plan.blocks[0].kept_in) == 3
+
+
+def test_compression_ratio_in_paper_band():
+    """Paper: 3.0x-8.4x compression across its pruning schemes."""
+    agcn_channels = (64, 64, 64, 64, 128, 128, 128, 256, 256, 256)
+    rng = np.random.default_rng(0)
+    cin = 3
+    sw = []
+    for cout in agcn_channels:
+        sw.append(rng.standard_normal((3, cin, cout)).astype(np.float32))
+        cin = cout
+    light = build_prune_plan(sw, agcn_channels, [1.0] + [0.5] * 9, "cav-50-1")
+    heavy = build_prune_plan(sw, agcn_channels, [1.0] + [0.3] * 9, "cav-75-1")
+    r_light = light.summary(agcn_channels, 3)["compression_ratio"]
+    r_heavy = heavy.summary(agcn_channels, 3)["compression_ratio"]
+    assert 2.4 < r_light < 4.5
+    assert 5.0 < r_heavy < 9.0
+    # graph-skip efficiency ~ channel drop rate (paper: 73.20% at Drop-*)
+    gs = heavy.summary(agcn_channels, 3)["graph_skip_efficiency"]
+    assert 0.6 < gs < 0.78
+
+
+def test_drop_scheme_from_sparsity():
+    keep = drop_scheme([0.3, 0.5, 0.7])
+    assert keep == [0.7, 0.5, pytest.approx(0.3)]
+    shifted = drop_scheme([0.3, 0.5, 0.7], shift=0.1)
+    assert all(s < k for s, k in zip(shifted, keep))
+
+
+def test_cavity_report():
+    r = cavity_report("cav-70-1")
+    assert r["balanced"]

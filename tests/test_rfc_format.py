@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) for the RFC format invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rfc.format import (
+    expected_sparsity_categories, mbhot, minibank_depths, rfc_decode,
+    rfc_encode, storage_cost,
+)
+
+
+@st.composite
+def activations(draw):
+    rows = draw(st.integers(1, 16))
+    banks = draw(st.integers(1, 8))
+    sparsity = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, banks * 16)).astype(np.float32)
+    x[rng.random(x.shape) < sparsity] = -1.0      # ReLU will zero these
+    return x
+
+
+@given(activations())
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_is_relu(x):
+    v, hot = rfc_encode(jnp.asarray(x))
+    out = rfc_decode(v, hot)
+    np.testing.assert_allclose(np.asarray(out), np.maximum(x, 0), atol=0)
+
+
+@given(activations())
+@settings(max_examples=50, deadline=None)
+def test_compaction_front_packed(x):
+    """All non-zeros of a bank sit before all zeros (front-packed)."""
+    v, hot = rfc_encode(jnp.asarray(x))
+    vb = np.asarray(v).reshape(-1, 16)
+    nz = vb != 0
+    for row in nz:
+        idx = np.flatnonzero(~row)
+        if idx.size:
+            assert not row[idx[0]:].any()
+
+
+@given(activations())
+@settings(max_examples=50, deadline=None)
+def test_mbhot_counts(x):
+    v, hot = rfc_encode(jnp.asarray(x))
+    mb = np.asarray(mbhot(jnp.asarray(np.asarray(hot) > 0)))
+    nnz = (np.asarray(hot) > 0).reshape(*mb.shape, 16).sum(-1)
+    np.testing.assert_array_equal(mb, np.ceil(nnz / 4))
+
+
+@given(activations())
+@settings(max_examples=30, deadline=None)
+def test_storage_cost_bounds(x):
+    _, hot = rfc_encode(jnp.asarray(x))
+    c = storage_cost(np.asarray(hot) > 0)
+    # RFC never exceeds dense by more than the hot-code overhead
+    assert c["rfc_bits"] <= c["dense_bits"] * (1 + (16 + 4) / (16 * 16)) + 1
+    # and is within one mini-bank per bank of the information floor
+    n_banks = x.size // 16
+    nnz = (np.maximum(x, 0) > 0).sum()
+    floor = nnz * 16
+    assert c["rfc_bits"] >= floor
+
+
+def test_storage_cost_paper_scenario():
+    """Paper §V-C example: uniform quartile mix -> ~37.5% storage saving."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for lo in (0.0, 0.25, 0.5, 0.75):
+        for _ in range(256):
+            nnz = int(16 * (1 - (lo + 0.125)))
+            row = np.zeros(16, bool)
+            row[rng.choice(16, nnz, replace=False)] = True
+            rows.append(row)
+    hot = np.stack(rows)
+    c = storage_cost(hot)
+    assert 0.25 < c["rfc_vs_dense_reduction"] < 0.50
+
+
+def test_minibank_depths_monotone():
+    d = minibank_depths((0.25, 0.25, 0.25, 0.25), total_depth=64)
+    assert len(d) == 4
+    assert all(d[i] >= d[i + 1] for i in range(3))
+    assert d[0] == 64                      # first mini-bank serves everyone
+
+
+def test_sparsity_categories_sum_to_one():
+    rng = np.random.default_rng(1)
+    hot = rng.random((512, 16)) > 0.5
+    cats = expected_sparsity_categories(hot)
+    assert abs(sum(cats) - 1.0) < 1e-9

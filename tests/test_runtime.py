@@ -1,0 +1,166 @@
+"""Runtime substrate tests: optimizer, checkpoint store, fault monitors,
+elastic re-meshing, data pipeline determinism, quantization."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import TrainConfig
+from repro.checkpoint import store
+from repro.configs import get_config
+from repro.core.quant import dequantize_int8, quantize_int8, quantize_q88
+from repro.data.pipeline import DataConfig, lm_batches, skeleton_batches
+from repro.fault.elastic import adjust_train_config, plan_degraded_mesh
+from repro.fault.monitor import HeartbeatMonitor, StragglerDetector
+from repro.optim import adamw
+
+
+# --------------------------------------------------------------------- optim
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=200,
+                       weight_decay=0.0)
+    state = adamw.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(params, grads, state, tcfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedule_shape():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.schedule(jnp.asarray(s), tcfg)) for s in range(100)]
+    assert lrs[0] < lrs[9]                          # warmup rises
+    assert lrs[10] == pytest.approx(1e-3, rel=0.1)  # peak
+    assert lrs[-1] < lrs[50] < lrs[10]              # cosine decays
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    store.save(str(tmp_path), 5, tree)
+    assert store.latest_step(str(tmp_path)) == 5
+    back = store.restore(str(tmp_path), 5, tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.arange(10.0))
+    assert back["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": jnp.arange(16.0)}
+    path = store.save(str(tmp_path), 1, tree)
+    leaf = next(pathlib.Path(path).glob("leaf_*.npy"))
+    arr = np.load(leaf)
+    arr[0] = 999.0
+    np.save(leaf, arr)
+    with pytest.raises(IOError, match="checksum"):
+        store.restore(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"a": jnp.zeros(4)}
+    for s in (1, 2, 3, 4, 5):
+        store.save(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+    assert steps == [4, 5]
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"a": jnp.arange(8.0)}
+    t = store.save_async(str(tmp_path), 7, tree)
+    t.join(timeout=30)
+    assert store.latest_step(str(tmp_path)) == 7
+
+
+# --------------------------------------------------------------------- fault
+
+def test_heartbeat_detects_dead_host():
+    hb = HeartbeatMonitor(num_hosts=4, timeout_s=10.0)
+    for h in range(4):
+        hb.beat(h, now=0.0)
+    hb.beat(0, now=20.0)
+    hb.beat(1, now=20.0)
+    hb.beat(2, now=20.0)
+    assert hb.dead_hosts(now=25.0) == [3]
+    assert not hb.healthy(now=25.0)
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(num_hosts=8, k=3.0)
+    for step in range(5):
+        for h in range(8):
+            sd.record(h, 1.0 + (3.0 if h == 6 else 0.0))
+    assert sd.stragglers() == {6}
+
+
+def test_elastic_plan_and_microbatches():
+    plan = plan_degraded_mesh(alive_chips=200, model=16, old_data=16)
+    assert plan is not None
+    assert plan.data == 8 and plan.chips == 128
+    tcfg = adjust_train_config(TrainConfig(microbatches=1), plan)
+    assert tcfg.microbatches == 2                 # global batch preserved
+    assert plan_degraded_mesh(alive_chips=8, model=16) is None
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    from repro.fault.elastic import reshard_checkpoint
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    store.save(str(tmp_path), 3, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    back = reshard_checkpoint(str(tmp_path), 3, tree, mesh, sh)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.arange(64.0).reshape(8, 8))
+
+
+# ---------------------------------------------------------------------- data
+
+def test_lm_batches_deterministic_and_host_sharded():
+    cfg = get_config("smollm-360m", reduced=True)
+    d0 = DataConfig(global_batch=8, seq_len=32, seed=1, host_index=0, host_count=2)
+    d1 = DataConfig(global_batch=8, seq_len=32, seed=1, host_index=1, host_count=2)
+    b0a = next(lm_batches(cfg, d0))
+    b0b = next(lm_batches(cfg, d0))
+    b1 = next(lm_batches(cfg, d1))
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])   # determinism
+    assert b0a["tokens"].shape == (4, 32)                          # host slice
+    assert not np.array_equal(b0a["tokens"], b1["tokens"])         # distinct
+
+
+def test_skeleton_batches_shapes():
+    cfg = get_config("agcn-2s", reduced=True)
+    d = DataConfig(global_batch=4, seq_len=0, seed=0)
+    b = next(skeleton_batches(cfg, d))
+    assert b["x"].shape == (4 * cfg.gcn_persons, cfg.gcn_frames, 25, 3)
+    assert b["labels"].shape == (4 * cfg.gcn_persons,)
+    assert b["labels"].max() < cfg.gcn_num_classes
+
+
+# --------------------------------------------------------------------- quant
+
+@given(st.lists(st.floats(-100, 100), min_size=1, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_q88_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q = quantize_q88(x)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x), atol=1 / 512 + 1e-6)
+
+
+def test_int8_roundtrip_small_error():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    q, s = quantize_int8(w, axis=0)
+    back = dequantize_int8(q, s)
+    rel = float(jnp.abs(back - w).max() / jnp.abs(w).max())
+    assert rel < 0.02

@@ -1,0 +1,44 @@
+"""Dynamic-scheduling expectation model (paper eq. 6 / Table II)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sched.expectation import (
+    delay_probability, dsp_allocation, expected_valid, scheduling_report,
+    valid_work_pmf,
+)
+
+
+@given(st.integers(1, 12), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_expectation_closed_form(w, s):
+    """E(D) = w·(1-s) — the binomial mean (paper eq. 6 is the w=6 case)."""
+    assert expected_valid(w, s) == pytest.approx(w * (1 - s), abs=1e-9)
+
+
+@given(st.integers(1, 12), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_pmf_normalised(w, s):
+    assert valid_work_pmf(w, s).sum() == pytest.approx(1.0, abs=1e-9)
+
+
+def test_dsp_allocation_bounds():
+    for w in (4, 6):
+        for s in (0.2, 0.5, 0.8):
+            d = dsp_allocation(w, s)
+            assert 1 <= d <= w
+
+
+def test_paper_table2_ballpark():
+    """Paper Table II: dynamic scheduling saves ~23% DSPs at ≤7.4% delay for
+    ~50-65% feature sparsity (Table III shows most vectors in II/III)."""
+    rep = scheduling_report(6, 0.5)
+    assert rep["dsp_saving"] >= 0.2
+    assert rep["delay_prob"] <= 0.15
+    assert rep["efficiency"] >= 0.6
+
+
+def test_delay_monotone_in_dsps():
+    probs = [delay_probability(6, 0.5, d) for d in range(1, 7)]
+    assert all(a >= b for a, b in zip(probs, probs[1:]))
+    assert probs[-1] == 0.0

@@ -1,0 +1,97 @@
+"""Sharding-rule invariants: every assigned arch's parameter tree gets
+valid specs on the production mesh shape, and the logical-rule machinery
+degrades gracefully (missing axes, no context)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, CONFIGS, get_config
+from repro.distributed import sharding as shd
+from repro.distributed.params import leaf_spec, param_specs
+from repro.launch.hlo_cost import analyze_hlo
+
+
+class FakeMesh:
+    """Shape-only stand-in so tests don't allocate 256 devices."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", list(CONFIGS))
+def test_param_specs_divisible(arch):
+    """Every spec'd dim must divide by its mesh axes — the invariant that
+    makes the production dry-run compile."""
+    cfg = get_config(arch)
+    from repro.models import registry
+    params = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16)
+        if cfg.family != "gcn"
+        else registry.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(params, MESH, expert_dim=cfg.padded_experts or None)
+    for (path, leaf), (_, spec) in zip(
+        jax.tree_util.tree_leaves_with_path(params),
+        jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 10):
+            if ax is not None:
+                assert dim % MESH.shape[ax] == 0, (path, leaf.shape, spec)
+
+
+def test_moe_experts_sharded_on_model():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    from repro.models import registry
+    params = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16))
+    specs = param_specs(params, MESH, expert_dim=cfg.padded_experts)
+    wi_spec = specs["layers"]["moe"]["wi"]
+    assert "model" in tuple(wi_spec)
+
+
+def test_logical_spec_drops_missing_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with shd.axis_rules(mesh):
+        spec = shd.logical_spec("batch", None, "ffn")
+        # 'pod' silently dropped from ('pod','data')
+        assert spec == P("data", None, "model")
+
+
+def test_constrain_noop_outside_context():
+    x = jnp.ones((4, 4))
+    y = shd.constrain(x, "batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_divisible_helper():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with shd.axis_rules(mesh):
+        assert shd.divisible(17, "ffn")      # 1-device mesh divides all
+
+
+# ------------------------------------------------------------------ hlo_cost
+
+def test_hlo_cost_counts_scan_trips():
+    def withscan(a, b):
+        def f(x, _):
+            return jnp.tanh(x @ b), None
+        x, _ = jax.lax.scan(f, a, None, length=16)
+        return x
+
+    sd = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = jax.jit(withscan).lower(sd, sd).compile()
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == pytest.approx(16 * 2 * 64**3, rel=0.01)
+
+
+def test_hlo_cost_flops_plain_matmul():
+    sd = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(sd, sd).compile()
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == pytest.approx(2 * 128**3, rel=0.01)
+    assert r["collective_bytes"] == 0
