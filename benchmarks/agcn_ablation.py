@@ -1,19 +1,29 @@
-"""Paper Table I: cost of the data-dependent C_k similarity graph.
+"""Paper Table I: cost of the data-dependent C_k similarity graph, plus the
+execution-backend axis (reference jnp engine vs fused Pallas kernels).
+
 Measures jitted forward wall time with/without C_k (reduced scale) and
-derives the throughput ratio (paper: 69.38 -> 98.87 fps, 1.43x)."""
+derives the throughput ratio (paper: 69.38 -> 98.87 fps, 1.43x).  The
+``--backend`` flag (reference | pallas | both) selects which engine
+backends the backend rows cover; forwards go through the same compiled
+ExecutionPlan flow as serving.
+"""
 from __future__ import annotations
 
 import dataclasses
+import sys
 
 import jax
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import demo_prune_plan, emit, parse_backends, time_fn
 from repro.configs import get_config
+from repro.core.agcn import engine
 from repro.core.agcn import model as M
 from repro.models import registry
 
 
 def main():
+    backends = parse_backends(sys.argv[1:])
+
     cfg = get_config("agcn-2s", reduced=True)
     x = jax.random.normal(jax.random.PRNGKey(1), (8, cfg.gcn_frames, 25, 3))
 
@@ -29,6 +39,20 @@ def main():
     emit("ablation/with_ck", t_with, "")
     emit("ablation/without_ck", t_without,
          f"speedup={t_with/t_without:.2f}x (paper: 1.43x on V100)")
+
+    # backend axis: dense and genuinely-pruned+quantized plans per backend
+    # (the reduced config carries no prune fracs, so build the canonical
+    # demo plan from the init weights — shared with kernels_bench)
+    prune = demo_prune_plan(cfg, p)
+    run = jax.jit(engine.execute)
+    for backend in backends:
+        for label, plan_, kwargs in (("dense", None, {}),
+                                     ("pruned_q", prune, {"quant": True})):
+            ep = engine.build_execution_plan(p, cfg, plan_, backend=backend,
+                                             **kwargs)
+            t = time_fn(run, ep, x, iters=3)
+            emit(f"ablation/backend_{backend}_{label}", t,
+                 f"clips_per_s={x.shape[0] / (t * 1e-6):.1f}")
 
 
 if __name__ == "__main__":

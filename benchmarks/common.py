@@ -1,10 +1,17 @@
-"""Shared benchmark helpers: timing, CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, row collection.
+
+``emit`` both prints the CSV row and appends it to ``ROWS`` so the harness
+(benchmarks/run.py) can dump a module's rows to ``BENCH_<module>.json`` —
+the backend-comparison artifact consumed by CI.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+ROWS: List[Dict] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,4 +30,39 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}")
+
+
+def drain_rows() -> List[Dict]:
+    """Return and clear the collected rows (per-module snapshot)."""
+    rows, ROWS[:] = list(ROWS), []
+    return rows
+
+
+def demo_prune_plan(cfg, params):
+    """The canonical reduced-config pruning plan used across the benches
+    (and mirrored by test_engine): magnitude selection from the init
+    weights, half the channels kept from block 1 on, cav-70-1, skip 2."""
+    import numpy as np
+
+    from repro.core.pruning.plan import build_prune_plan
+
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    fracs = [1.0] + [0.5] * (len(cfg.gcn_channels) - 1)
+    return build_prune_plan(sw, cfg.gcn_channels, fracs, "cav-70-1",
+                            input_skip=2)
+
+
+def parse_backends(argv) -> tuple:
+    """Shared ``--backend`` axis parser (choices derive from the engine's
+    backend registry, so new backends appear here automatically).  Unknown
+    flags are tolerated — modules run under benchmarks.run's argv."""
+    import argparse
+
+    from repro.core.agcn.engine import BACKENDS
+
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--backend", default="both", choices=(*BACKENDS, "both"))
+    args, _ = ap.parse_known_args(argv)
+    return BACKENDS if args.backend == "both" else (args.backend,)

@@ -1,19 +1,45 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle wall time
 on CPU.  Interpret-mode timing is NOT TPU-representative — the quantity that
 matters is the FLOP/byte skip encoded in the kernel shapes, which is also
-reported."""
+reported.
+
+The cavity/graph inputs come from the same ExecutionPlan compiler the model
+uses (engine.build_execution_plan) instead of hand-packing, so the bench
+exercises exactly the layouts the serving path runs; the final rows compare
+full-model forward time per backend (``--backend`` selects which; these are
+the rows that land in BENCH_kernels_bench.json via
+``benchmarks.run --only kernels``).
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import sys
 
-from benchmarks.common import emit, time_fn
-from repro.core.pruning.cavity import cavity_pattern, tile_pattern
+import jax
+
+from benchmarks.common import demo_prune_plan, emit, parse_backends, time_fn
+from repro.configs import get_config
+from repro.core.agcn import engine
+from repro.core.agcn import model as M
 from repro.kernels import ops, ref
 
 
+def _block_inputs():
+    """Compile the canonical reduced plan for both backends: the pallas one
+    supplies the packed/padded kernel inputs, the reference one the dense
+    oracle forms (pallas plans deliberately drop them)."""
+    cfg = get_config("agcn-2s", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prune = demo_prune_plan(cfg, params)
+    pallas_plan = engine.build_execution_plan(params, cfg, prune,
+                                              backend="pallas")
+    ref_plan = engine.build_execution_plan(params, cfg, prune,
+                                           backend="reference")
+    return cfg, params, prune, pallas_plan, ref_plan
+
+
 def main():
+    backends = parse_backends(sys.argv[1:])
+
     # RFC encode/decode
     x = jax.random.normal(jax.random.PRNGKey(0), (512, 256))
     t_enc = time_fn(lambda a: ops.rfc_encode(a), x, iters=3)
@@ -21,33 +47,50 @@ def main():
     emit("kernels/rfc_encode_pallas", t_enc, "")
     emit("kernels/rfc_encode_ref", t_ref, "")
 
-    # cavity tconv: FLOP skip from packed shapes
-    F, C = 64, 64
-    w = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (F, C, 9)),
-                   np.float32)
-    mask = tile_pattern(cavity_pattern("cav-70-1"), F)
-    wp, taps, inv = ops.pack_cavity_weights(w * mask[:, None, :], mask)
+    cfg, params, prune, pplan, rplan = _block_inputs()
+
+    # cavity tconv: packed shapes straight from the ExecutionPlan (block 1:
+    # pruned filters + cavity taps), vs the dense masked-conv oracle
+    pa, bs = pplan.arrays["blocks"][1], pplan.static.blocks[1]
+    ra = rplan.arrays["blocks"][1]
+    C = ra["tw"].shape[1]
     xt = jax.random.normal(jax.random.PRNGKey(2), (16, 128, C))
     t_k = time_fn(
-        lambda a: ops.cavity_tconv(a, jnp.asarray(wp), jnp.asarray(taps),
-                                   inv, F), xt, iters=3)
-    t_r = time_fn(
-        lambda a: ref.cavity_tconv_ref(a, jnp.asarray(w * mask[:, None, :])),
-        xt, iters=3)
+        lambda a: ops.cavity_tconv(a, pa["wp"], pa["taps"], pa["inv_perm"],
+                                   bs.n_kept_filters), xt, iters=3)
+    t_r = time_fn(lambda a: ref.cavity_tconv_ref(a, ra["tw"]), xt, iters=3)
+    n_keep, K = pa["wp"].shape[1], bs.tkernel
     emit("kernels/cavity_tconv_pallas", t_k,
-         f"taps={wp.shape[1]}/9 flop_skip={(1-wp.shape[1]/9)*100:.0f}%")
+         f"taps={n_keep}/{K} flop_skip={(1 - n_keep / K) * 100:.0f}%")
     emit("kernels/cavity_tconv_ref", t_r, "")
 
-    # fused graph+spatial conv
-    xg = jax.random.normal(jax.random.PRNGKey(3), (4, 64, 25, 64))
-    g = jax.random.normal(jax.random.PRNGKey(4), (3, 25, 25))
-    wg = jax.random.normal(jax.random.PRNGKey(5), (3, 64, 128))
-    t_k = time_fn(lambda a: ops.graph_sconv(a, g, wg), xg, iters=3)
+    # fused graph+spatial conv: plan-precomputed padded graph + gathered W
+    xg = jax.random.normal(jax.random.PRNGKey(3),
+                           (4, 64, cfg.gcn_joints, pa["Wk"].shape[1]))
+    t_k = time_fn(lambda a: ops.graph_sconv(a, pa["Gp"], pa["Wk"]), xg,
+                  iters=3)
     t_r = time_fn(
-        lambda a: ref.graph_sconv_ref(a.reshape(-1, 25, 64), g, wg), xg,
-        iters=3)
+        lambda a: ref.graph_sconv_ref(
+            a.reshape(-1, cfg.gcn_joints, ra["Wk"].shape[1]),
+            ra["G"], ra["Wk"]), xg, iters=3)
     emit("kernels/graph_sconv_pallas", t_k, "fused G-matmul+1x1 (1 HBM pass)")
     emit("kernels/graph_sconv_ref", t_r, "")
+
+    # backend comparison: full-model forward through the engine, identical
+    # ExecutionPlan flow for both backends (parity is locked by test_engine)
+    xm = jax.random.normal(jax.random.PRNGKey(4), (8, cfg.gcn_frames, 25, 3))
+    times = {}
+    for backend in backends:
+        ep = engine.build_execution_plan(params, cfg, prune, quant=True,
+                                         backend=backend)
+        fn = jax.jit(engine.execute)
+        times[backend] = time_fn(fn, ep, xm, iters=3)
+        emit(f"kernels/backend_forward_{backend}", times[backend],
+             f"clips_per_s={8 / (times[backend] * 1e-6):.1f}")
+    if len(times) > 1:
+        emit("kernels/backend_forward_ratio", 0.0,
+             f"pallas/reference={times['pallas'] / times['reference']:.2f}x "
+             "(interpret-mode CPU; not TPU-representative)")
 
 
 if __name__ == "__main__":

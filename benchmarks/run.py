@@ -2,12 +2,20 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only MODULE]
+
+With ``--only MODULE`` the module's rows are also written to
+``BENCH_<MODULE>.json`` (e.g. ``--only kernels_bench`` →
+``BENCH_kernels_bench.json`` with the backend-comparison rows); ``--json``
+forces the dump for a full run (one file per module).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+from benchmarks import common
 
 MODULES = [
     "pruning_bench",      # Fig. 8/9/10 — hybrid pruning
@@ -22,9 +30,16 @@ MODULES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
-    mods = [args.only] if args.only else MODULES
+    ap.add_argument("--only", default=None,
+                    help="run one module (accepts 'kernels' for kernels_bench)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<module>.json for every module run")
+    # unknown flags (e.g. --backend) pass through to the modules' own parsers
+    args, _ = ap.parse_known_args()
+    only = args.only
+    if only and only not in MODULES and f"{only}_bench" in MODULES:
+        only = f"{only}_bench"           # `--only kernels` shorthand
+    mods = [only] if only else MODULES
     print("name,us_per_call,derived")
     failed = []
     for m in mods:
@@ -34,7 +49,15 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failed.append(m)
             traceback.print_exc()
-            print(f"{m},0.0,ERROR {e!r}")
+            # emit (not print) so the failure lands in the JSON artifact too
+            # — a partial BENCH_<module>.json must not look like a full run
+            common.emit(f"{m}/ERROR", 0.0, repr(e))
+        rows = common.drain_rows()
+        if rows and (only or args.json):
+            path = f"BENCH_{m}.json"
+            with open(path, "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"# wrote {len(rows)} rows -> {path}", file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

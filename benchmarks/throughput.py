@@ -9,12 +9,17 @@ throughput from the model's analytic op counts and the pruning plan:
 using the paper's own accounting (GOP counted on the *dense* model, skips
 credited to the accelerator — the same convention behind 1142 GOP/s), and
 report the FLOP-reduction chain original → w/oC → +skip → +prune.
+The ``--backend`` axis adds *measured* clips/s for the execution engine's
+reference and pallas backends on the reduced config (interpret-mode CPU —
+relative structure, not TPU wall time).
 """
 from __future__ import annotations
 
+import sys
+
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, parse_backends
 from repro.configs import get_config
 from repro.core.pruning.plan import build_prune_plan
 from repro.launch.mesh import PEAK_FLOPS_BF16
@@ -81,6 +86,24 @@ def main():
     for k in ("2080ti_fps", "v100_fps", "2080ti_skip", "v100_skip"):
         emit(f"throughput/paper/{k}", 0.0,
              f"speedup_vs_fpga={PAPER['ours_fpga_fps']/PAPER[k]:.2f}x")
+
+    # measured backend axis: engine forward on the reduced config
+    backends = parse_backends(sys.argv[1:])
+    import jax
+    from benchmarks.common import time_fn
+    from repro.core.agcn import engine
+    from repro.core.agcn import model as M
+
+    cfg = get_config("agcn-2s", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, cfg.gcn_frames, 25, 3))
+    run = jax.jit(engine.execute)
+    for backend in backends:
+        ep = engine.build_execution_plan(params, cfg, quant=True,
+                                         backend=backend)
+        t = time_fn(run, ep, x, iters=3)
+        emit(f"throughput/measured/{backend}", t,
+             f"clips_per_s={x.shape[0] / (t * 1e-6):.1f} (interpret CPU)")
 
 
 if __name__ == "__main__":

@@ -86,6 +86,12 @@ class ModelConfig:
     input_skip: int = 1                    # keep 1 of every `input_skip` frames
     rfc_bank: int = 16                     # RFC bank width (C3)
     rfc_minibank: int = 4                  # RFC mini-bank depth granularity
+    gcn_backend: str = "reference"         # engine backend: reference | pallas.
+                                           # Default for eager forward() calls;
+                                           # jitted steps (train/loss_fn) always
+                                           # run the differentiable reference —
+                                           # pallas rides prebuilt ExecutionPlans
+                                           # (steps.make_gcn_infer_step, serve)
 
     # --- distribution hints ---
     scan_group: int = 1                    # layers per scan body group

@@ -16,6 +16,8 @@ CONFIG = ModelConfig(
     # pruned structure; dense-baseline cells live in experiments/dryrun_baseline
     cavity_pattern="cav-70-1", input_skip=2,
     prune_channel_fracs=(1.0, 0.6, 0.6, 0.55, 0.5, 0.5, 0.45, 0.4, 0.35, 0.3),
+    # engine backend for inference paths (serve/bench); --backend overrides
+    gcn_backend="reference",
     # perf: 3.5M params -> replicate weights, model axis = extra DP
     # (EXPERIMENTS.md §Perf, agcn hillclimb iteration 1)
     sharding="dp_only",
@@ -31,4 +33,5 @@ REDUCED = ModelConfig(
     gcn_channels=(8, 8, 16, 16), gcn_strides=(1, 1, 2, 1),
     gcn_kv=3, gcn_tkernel=9,
     cavity_pattern="cav-70-1", input_skip=2,
+    gcn_backend="reference",
 )

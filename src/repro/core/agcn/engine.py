@@ -1,0 +1,434 @@
+"""Backend-dispatched AGCN execution engine (plan-compile-then-execute).
+
+The paper's accelerator runs the reorganized graph+spatial dataflow, the
+cavity-pruned temporal conv and the runtime RFC compress as one fused
+on-chip pipeline.  This module is the software analogue: instead of the
+model re-deriving gathers / packings / padded graphs on every step, an
+``ExecutionPlan`` is compiled **once** from ``(params, PrunePlan,
+ModelConfig)`` and the hot loop only executes it.
+
+Two backends implement the per-block ops:
+
+  reference — the pure-jnp einsum path (extracted from ``model.py``); fully
+              traceable, so it also serves the differentiable train path.
+  pallas    — the fused Pallas kernels in ``repro.kernels.ops``:
+              ``graph_sconv`` (graph matmul + 1×1 conv in one VMEM pass),
+              packed ``cavity_tconv`` (kept-tap matmuls only), and RFC
+              encode/decode between blocks as the inter-layer activation
+              format.  ``interpret=True`` runs the same BlockSpecs on CPU;
+              on TPU pass ``interpret=False`` and they compile.
+
+The plan is a registered pytree: its arrays are jit arguments (so two
+plans built from the same config hit the same jit cache entry — no
+re-tracing, and *no re-packing inside the jitted step*), while shapes,
+strides and flags live in the hashable static aux.
+
+Pallas plans must be built **outside** jit: cavity weight packing
+(``ops.pack_cavity_weights``) is host-side numpy by design — that is the
+"compile" in plan-compile-then-execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core.agcn.graph import build_ntu_subsets, similarity_graph
+from repro.core.pruning.plan import PrunePlan
+from repro.core.quant import quantize_q88
+from repro.kernels import ops
+
+BACKENDS = ("reference", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# plan containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockStatic:
+    """Hashable per-block metadata (shapes and flags the tracer must see
+    as python constants)."""
+
+    stride: int
+    cout: int
+    n_kept_filters: int
+    tkernel: int
+    use_ck: bool
+    pruned_in: bool          # kept_in gather present
+    pruned_filters: bool     # kept_filters scatter present
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStatic:
+    backend: str
+    interpret: bool
+    input_skip: int
+    use_rfc: bool            # RFC roundtrip between blocks (pallas format)
+    rfc_bank: int
+    tkernel: int
+    blocks: Tuple[BlockStatic, ...]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Compiled, engine-ready form of one AGCN stream.
+
+    ``arrays`` is the pytree the jitted step consumes (pre-gathered /
+    pre-quantized / pre-packed weights, precomputed graphs ``A + B_k``,
+    kept-index vectors); ``static`` is the hashable aux.
+    """
+
+    arrays: Dict[str, Any]
+    static: PlanStatic
+
+    def tree_flatten(self):
+        return (self.arrays,), self.static
+
+    @classmethod
+    def tree_unflatten(cls, static, children):
+        return cls(arrays=children[0], static=static)
+
+
+# ---------------------------------------------------------------------------
+# shared math (used by both backends and by the legacy-compatible paths)
+# ---------------------------------------------------------------------------
+
+def batch_norm(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
+               eps: float = 1e-5) -> jnp.ndarray:
+    """Stateless batch norm: f32-accumulated stats, elementwise math in the
+    activation dtype (see model.py docstring / EXPERIMENTS §Perf)."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axes, keepdims=True)
+    var = jnp.var(x, axes, keepdims=True)
+    inv = jax.lax.rsqrt(var.astype(jnp.float32) + eps).astype(x.dtype)
+    return (x - mean) * inv * p["scale"] + p["bias"]
+
+
+def _proj(x, w, bn, stride):
+    if stride != 1:
+        x = x[:, ::stride]
+    return batch_norm(jnp.einsum("ntvc,co->ntvo", x, w), bn)
+
+
+def _scatter_filters(out: jnp.ndarray, fidx: jnp.ndarray, cout: int):
+    """Scatter compacted filter outputs back to full width (pruned filters
+    stay zero so the residual path sees the accelerator's shortcut layout)."""
+    full = jnp.zeros((*out.shape[:-1], cout), out.dtype)
+    return full.at[..., fidx].set(out)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+class Backend(Protocol):
+    """Per-block op provider.  ``ba`` are the block's plan arrays, ``bs``
+    its static metadata; activations are (N, T, V, C)."""
+
+    name: str
+
+    def spatial(self, x: jnp.ndarray, ba: Dict[str, Any],
+                bs: BlockStatic) -> jnp.ndarray: ...
+
+    def temporal(self, x: jnp.ndarray, ba: Dict[str, Any],
+                 bs: BlockStatic) -> jnp.ndarray: ...
+
+    def transfer(self, h: jnp.ndarray, ps: PlanStatic) -> jnp.ndarray: ...
+
+
+def _gather_in(x: jnp.ndarray, ba: Dict[str, Any]) -> jnp.ndarray:
+    if ba["kept_in"] is not None:
+        return jnp.take(x, ba["kept_in"], axis=-1)
+    return x
+
+
+def _spatial_einsum(x: jnp.ndarray, ba: Dict[str, Any],
+                    bs: BlockStatic) -> jnp.ndarray:
+    """Reference math for Σ_k (G_k·x)·W_k (+ optional data-dependent C_k)."""
+    G = ba["G"].astype(x.dtype)
+    Wk = ba["Wk"].astype(x.dtype)
+    if bs.use_ck:
+        Ck = similarity_graph(x, ba["theta"], ba["phi"])
+        Gn = G[None] + Ck[:, None]                    # (N, K, V, V)
+        y = jnp.einsum("ntvc,nkwv->nktwc", x, Gn)
+        return jnp.einsum("nktwc,kco->ntwo", y, Wk)
+    return jnp.einsum("ntvc,kwv,kco->ntwo", x, G, Wk)
+
+
+class ReferenceBackend:
+    """Pure-jnp path — today's model math, executed from the plan."""
+
+    name = "reference"
+
+    def spatial(self, x, ba, bs):
+        return _spatial_einsum(_gather_in(x, ba), ba, bs)
+
+    def temporal(self, x, ba, bs):
+        w = ba["tw"].astype(x.dtype)                  # (F_kept, C, K) masked
+        K = w.shape[-1]
+        pad = K // 2
+        rhs = jnp.transpose(w, (2, 1, 0))[:, None, :, :]   # (K, 1, C, F)
+        out = jax.lax.conv_general_dilated(
+            x, rhs,
+            window_strides=(bs.stride, 1),
+            padding=((pad, pad), (0, 0)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        out = out + ba["tb"]
+        if bs.pruned_filters:
+            out = _scatter_filters(out, ba["kept_filters"], bs.cout)
+        return out
+
+    def transfer(self, h, ps):
+        return h
+
+
+class PallasBackend:
+    """Fused Pallas kernels; RFC roundtrip is the inter-layer format.
+
+    The data-dependent C_k graph cannot be precompiled (it is a function of
+    the activations), so blocks with ``use_ck`` fall back to the reference
+    einsum — matching the paper, which drops C_k at deployment (Table I).
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    def spatial(self, x, ba, bs):
+        xg = _gather_in(x, ba)
+        if bs.use_ck:
+            return _spatial_einsum(xg, ba, bs)
+        return ops.graph_sconv(xg, ba["Gp"], ba["Wk"],
+                               interpret=self.interpret)
+
+    def temporal(self, x, ba, bs):
+        N, T, V, C = x.shape
+        xb = jnp.transpose(x, (0, 2, 1, 3)).reshape(N * V, T, C)
+        out = ops.cavity_tconv(
+            xb, ba["wp"], ba["taps"], ba["inv_perm"],
+            num_filters=bs.n_kept_filters, kernel_size=bs.tkernel,
+            stride=bs.stride, interpret=self.interpret,
+        )                                            # (N*V, T_out, F_kept)
+        T_out = out.shape[1]
+        out = jnp.transpose(
+            out.reshape(N, V, T_out, -1), (0, 2, 1, 3))
+        out = out + ba["tb"]
+        if bs.pruned_filters:
+            out = _scatter_filters(out, ba["kept_filters"], bs.cout)
+        return out
+
+    def transfer(self, h, ps):
+        if not ps.use_rfc:
+            return h
+        vals, hot = ops.rfc_encode(h, bank=ps.rfc_bank,
+                                   interpret=self.interpret)
+        return ops.rfc_decode(vals, hot, bank=ps.rfc_bank,
+                              interpret=self.interpret)
+
+
+def get_backend(name: str, interpret: bool = True) -> Backend:
+    if name == "reference":
+        return ReferenceBackend()
+    if name == "pallas":
+        return PallasBackend(interpret=interpret)
+    raise ValueError(f"unknown backend {name!r} (expected one of {BACKENDS})")
+
+
+# ---------------------------------------------------------------------------
+# plan compilation
+# ---------------------------------------------------------------------------
+
+def _to_numpy(x) -> np.ndarray:
+    """Concretize for host-side packing — raises a clear error if a pallas
+    plan is being built inside jit (packing must happen outside the step)."""
+    try:
+        return np.asarray(x)
+    except jax.errors.TracerArrayConversionError as e:
+        raise ValueError(
+            "pallas ExecutionPlans must be built outside jit: cavity weight "
+            "packing is host-side (plan-compile-then-execute)") from e
+
+
+def build_execution_plan(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    prune_plan: Optional[PrunePlan] = None,
+    *,
+    quant: bool = False,
+    backend: str = "reference",
+    interpret: bool = True,
+    use_rfc: Optional[bool] = None,
+) -> ExecutionPlan:
+    """Compile ``(params, PrunePlan, ModelConfig)`` into an ExecutionPlan.
+
+    Everything the hot loop should not redo per step happens here: kept-
+    channel index gathers, graph precompute ``A + B_k`` (padded to
+    ``(K, Vp, Vp)`` for the pallas kernel), temporal filter gather + cavity
+    tap masking, cavity weight packing, Q8.8 weight quantization, and the
+    per-block shape bookkeeping.  Building is pure: same inputs produce an
+    identical plan (leaf-for-leaf), so jitted steps taking the plan as an
+    argument never retrace across rebuilds.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro.core.agcn.model import AGCN_STRIDES  # no import cycle: model
+    strides = cfg.gcn_strides or AGCN_STRIDES       # lazily imports engine
+    V = cfg.gcn_joints
+    Vp = ((V + 7) // 8) * 8
+    # host-side numpy graph build — stays concrete even under a jit trace
+    # (the reference backend's plan build is traced by the train path)
+    A = build_ntu_subsets(cfg.gcn_kv).astype(np.float32)
+
+    blocks_a: List[Dict[str, Any]] = []
+    blocks_s: List[BlockStatic] = []
+    for b, blk in enumerate(params["blocks"]):
+        pb = prune_plan.blocks[b] if prune_plan is not None else None
+        cout = int(blk["tconv_w"].shape[0])
+        use_ck = bool(cfg.use_ck and "theta" in blk)
+
+        # --- spatial: graph precompute + kept-channel gather + quant ------
+        G = jnp.asarray(A, jnp.float32) + blk["Bk"].astype(jnp.float32)
+        Wk = blk["Wk"]
+        if quant:
+            Wk = quantize_q88(Wk)
+        theta, phi = blk.get("theta"), blk.get("phi")
+        kept_in = None
+        if pb is not None:
+            kept_in = jnp.asarray(pb.kept_in, jnp.int32)
+            Wk = jnp.take(Wk, kept_in, axis=1)
+            if use_ck:
+                theta = jnp.take(theta, kept_in, axis=0)
+                phi = jnp.take(phi, kept_in, axis=0)
+
+        # --- temporal: filter gather + cavity mask + quant ----------------
+        tw = blk["tconv_w"]                           # (F, C, K)
+        if quant:
+            tw = quantize_q88(tw)
+        tb = blk["tconv_b"]
+        kept_filters = None
+        tap_mask = np.ones((cout, cfg.gcn_tkernel), bool)
+        if pb is not None:
+            kept_filters = jnp.asarray(pb.kept_filters, jnp.int32)
+            tw = jnp.take(tw, kept_filters, axis=0)
+            tb = jnp.take(tb, kept_filters)
+            tap_mask = np.asarray(pb.tap_mask, bool)
+            tw = tw * jnp.asarray(tap_mask, tw.dtype)[:, None, :]
+        n_kept = int(tw.shape[0])
+
+        ba: Dict[str, Any] = {
+            "G": G, "Wk": Wk, "kept_in": kept_in,
+            "theta": theta, "phi": phi,
+            "bn_s": blk["bn_s"], "bn_t": blk["bn_t"],
+            "tw": tw, "tb": tb, "kept_filters": kept_filters,
+            "down_w": blk.get("down_w"), "bn_down": blk.get("bn_down"),
+            "short_w": blk.get("short_w"), "bn_short": blk.get("bn_short"),
+            "Gp": None, "wp": None, "taps": None, "inv_perm": None,
+        }
+
+        if backend == "pallas":
+            # padded graph (K, Vp, Vp): the kernel's sublane-aligned layout
+            Gp = jnp.zeros((G.shape[0], Vp, Vp), G.dtype)
+            ba["Gp"] = Gp.at[:, :V, :V].set(G)
+            # host-side cavity packing — dense blocks pack the full 9 taps
+            wp, taps, inv = ops.pack_cavity_weights(
+                _to_numpy(tw), tap_mask[:n_kept] if pb is not None
+                else np.ones((n_kept, cfg.gcn_tkernel), bool))
+            ba["wp"] = jnp.asarray(wp)
+            ba["taps"] = jnp.asarray(taps)
+            ba["inv_perm"] = jnp.asarray(inv, jnp.int32)
+            # drop the dense forms the pallas path never reads — they'd ride
+            # every jit call as dead payload (G stays only for the C_k
+            # fallback, which runs the reference einsum)
+            ba["tw"] = None
+            if not use_ck:
+                ba["G"] = None
+
+        blocks_a.append(ba)
+        blocks_s.append(BlockStatic(
+            stride=int(strides[b]), cout=cout, n_kept_filters=n_kept,
+            tkernel=int(cfg.gcn_tkernel), use_ck=use_ck,
+            pruned_in=kept_in is not None,
+            pruned_filters=kept_filters is not None,
+        ))
+
+    input_skip = (prune_plan.input_skip if prune_plan is not None
+                  else cfg.input_skip)
+    if use_rfc is None:
+        use_rfc = backend == "pallas"
+    static = PlanStatic(
+        backend=backend, interpret=bool(interpret),
+        input_skip=int(input_skip), use_rfc=bool(use_rfc),
+        rfc_bank=int(cfg.rfc_bank), tkernel=int(cfg.gcn_tkernel),
+        blocks=tuple(blocks_s),
+    )
+    arrays = {
+        "data_bn": params["data_bn"],
+        "blocks": blocks_a,
+        "fc_w": params["fc_w"], "fc_b": params["fc_b"],
+    }
+    return ExecutionPlan(arrays=arrays, static=static)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _stem(arrays, x, input_skip: int) -> jnp.ndarray:
+    x = x.astype(arrays["data_bn"]["scale"].dtype)
+    if input_skip > 1:
+        x = x[:, ::input_skip]            # C5 input-skipping (frame sampling)
+    N, T, V, C = x.shape
+    h = x.reshape(N, T, V * C)
+    return batch_norm(h, arrays["data_bn"]).reshape(N, T, V, C)
+
+
+def _run_block(h, ba, bs, backend: Backend):
+    s = backend.spatial(h, ba, bs)
+    s = batch_norm(s, ba["bn_s"])
+    down = (_proj(h, ba["down_w"], ba["bn_down"], 1)
+            if ba["down_w"] is not None else h)
+    s = jax.nn.relu(s + down)
+    t = backend.temporal(s, ba, bs)
+    t = batch_norm(t, ba["bn_t"])
+    if ba["short_w"] is not None:
+        res = _proj(h, ba["short_w"], ba["bn_short"], bs.stride)
+    else:
+        res = h if bs.stride == 1 else h[:, ::bs.stride]
+    return jax.nn.relu(t + res)
+
+
+def block_outputs(plan: ExecutionPlan, x: jnp.ndarray) -> List[jnp.ndarray]:
+    """Per-block post-ReLU activations (drives the sparsity probe)."""
+    backend = get_backend(plan.static.backend, plan.static.interpret)
+    h = _stem(plan.arrays, x, plan.static.input_skip)
+    outs = []
+    nblocks = len(plan.static.blocks)
+    for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"],
+                                     plan.static.blocks)):
+        h = _run_block(h, ba, bs, backend)
+        outs.append(h)
+        if b < nblocks - 1:
+            h = backend.transfer(h, plan.static)
+    return outs
+
+
+def execute(plan: ExecutionPlan, x: jnp.ndarray) -> jnp.ndarray:
+    """Run the compiled plan on a clip batch (N, T, V, C) -> logits."""
+    backend = get_backend(plan.static.backend, plan.static.interpret)
+    h = _stem(plan.arrays, x, plan.static.input_skip)
+    nblocks = len(plan.static.blocks)
+    for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"],
+                                     plan.static.blocks)):
+        h = _run_block(h, ba, bs, backend)
+        if b < nblocks - 1:
+            h = backend.transfer(h, plan.static)
+    pooled = h.mean(axis=(1, 2))                       # (N, C_last)
+    return pooled @ plan.arrays["fc_w"] + plan.arrays["fc_b"]

@@ -13,19 +13,23 @@ as in the reference implementation of Shi et al. [9]:
 BatchNorm is implemented statelessly (batch statistics at both train and
 inference time — the paper's accelerator runs fixed batches, and this keeps
 the step functions pure); the learned scale/bias are real parameters.
+
+This module owns parameters and the public API; the per-op math lives in
+``repro.core.agcn.engine`` behind a backend-dispatched ExecutionPlan:
+``forward`` compiles the plan (or takes a prebuilt one) and executes it.
+The default ``reference`` backend is fully traceable/differentiable — the
+train path is unchanged; the ``pallas`` backend runs the fused kernels.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.core.agcn.graph import similarity_graph, static_graph
 from repro.core.pruning.plan import PrunePlan
-from repro.core.quant import quantize_q88
 
 AGCN_CHANNELS = (64, 64, 64, 64, 128, 128, 128, 256, 256, 256)
 AGCN_STRIDES = (1, 1, 1, 1, 2, 1, 1, 2, 1, 1)
@@ -83,135 +87,9 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
     }
 
 
-def _bn(x: jnp.ndarray, p: Dict[str, jnp.ndarray], eps: float = 1e-5) -> jnp.ndarray:
-    """Dtype-preserving batch norm: stats are reduced with f32 accumulation
-    (XLA reduce semantics) but the elementwise normalisation stays in the
-    activation dtype — no convert ops materialising f32 copies of the
-    activation tensor (perf iteration 3, EXPERIMENTS §Perf)."""
-    axes = tuple(range(x.ndim - 1))
-    mean = jnp.mean(x, axes, keepdims=True)
-    var = jnp.var(x, axes, keepdims=True)
-    inv = jax.lax.rsqrt(var.astype(jnp.float32) + eps).astype(x.dtype)
-    return (x - mean) * inv * p["scale"] + p["bias"]
-
-
 # ---------------------------------------------------------------------------
-# block pieces
+# model — a thin dispatcher over the execution engine
 # ---------------------------------------------------------------------------
-
-def _spatial_conv(
-    x: jnp.ndarray,            # (N, T, V, Cin)
-    blk: Dict[str, Any],
-    A: jnp.ndarray,            # (K, V, V) static graph
-    kept_in: Optional[Tuple[int, ...]],
-    use_ck: bool,
-    quant: bool,
-) -> jnp.ndarray:
-    """Reorganized-dataflow graph + 1×1 conv (paper eq. (5)).
-
-    With pruning, only kept input channels enter the graph matmul *and* the
-    conv — the paper's graph-skipping, realised as compaction (DESIGN §2).
-    """
-    Wk = blk["Wk"]                                   # (K, Cin, Cout)
-    if quant:
-        Wk = quantize_q88(Wk)
-    theta, phi = blk.get("theta"), blk.get("phi")
-    if kept_in is not None:
-        idx = jnp.asarray(kept_in, jnp.int32)
-        x = jnp.take(x, idx, axis=-1)
-        Wk = jnp.take(Wk, idx, axis=1)
-        if use_ck:
-            theta = jnp.take(theta, idx, axis=0)
-            phi = jnp.take(phi, idx, axis=0)
-    G = (A + blk["Bk"]).astype(x.dtype)              # (K, V, V)
-    if use_ck:
-        Ck = similarity_graph(x, theta, phi)
-        Gn = G[None] + Ck[:, None]                   # (N, K, V, V)
-        y = jnp.einsum("ntvc,nkwv->nktwc", x, Gn)
-    else:
-        # fused (G·f)·W summed over subsets — the reorganized order lets a
-        # pruned channel skip both multiplies.  Single einsum: XLA picks the
-        # contraction order and fuses without materialising the transposed
-        # (n,k,t,w,c) intermediate (perf iteration 2, EXPERIMENTS §Perf).
-        return jnp.einsum("ntvc,kwv,kco->ntwo", x, G, Wk.astype(x.dtype))
-    return jnp.einsum("nktwc,kco->ntwo", y, Wk.astype(y.dtype))
-
-
-def _temporal_conv(
-    x: jnp.ndarray,            # (N, T, V, C)
-    blk: Dict[str, Any],
-    stride: int,
-    plan_block,
-    quant: bool,
-) -> jnp.ndarray:
-    """9×1 temporal conv with coarse filter pruning + cavity tap masks (C2).
-
-    Pruned filters are *not computed* (compaction) and scattered back as
-    zeros so the residual path stays full-width, matching the accelerator's
-    shortcut storage.
-    """
-    w = blk["tconv_w"]                               # (F=cout, Cin=cout, K)
-    if quant:
-        w = quantize_q88(w)
-    cout = w.shape[0]
-    fidx = None
-    if plan_block is not None:
-        fidx = jnp.asarray(plan_block.kept_filters, jnp.int32)
-        w = jnp.take(w, fidx, axis=0)
-        mask = jnp.asarray(plan_block.tap_mask, w.dtype)  # (F_kept, K)
-        w = w * mask[:, None, :]
-    K = w.shape[-1]
-    pad = K // 2
-    rhs = jnp.transpose(w, (2, 1, 0))[:, None, :, :]  # (K, 1, Cin, F)
-    out = jax.lax.conv_general_dilated(
-        x, rhs,
-        window_strides=(stride, 1),
-        padding=((pad, pad), (0, 0)),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
-    if fidx is not None:
-        out = out + jnp.take(blk["tconv_b"], fidx)
-        full = jnp.zeros((*out.shape[:-1], cout), out.dtype)
-        out = full.at[..., fidx].set(out)
-    else:
-        out = out + blk["tconv_b"]
-    return out
-
-
-def _proj(x, w, bn, stride):
-    if stride != 1:
-        x = x[:, ::stride]
-    return _bn(jnp.einsum("ntvc,co->ntvo", x, w), bn)
-
-
-def _block(h, blk, A, strides_b, pb, use_ck, quant):
-    kept_in = pb.kept_in if pb is not None else None
-    s = _spatial_conv(h, blk, A, kept_in, use_ck, quant)
-    s = _bn(s, blk["bn_s"])
-    down = _proj(h, blk["down_w"], blk["bn_down"], 1) if "down_w" in blk else h
-    s = jax.nn.relu(s + down)
-    t = _temporal_conv(s, blk, strides_b, pb, quant)
-    t = _bn(t, blk["bn_t"])
-    if "short_w" in blk:
-        res = _proj(h, blk["short_w"], blk["bn_short"], strides_b)
-    else:
-        res = h if strides_b == 1 else h[:, ::strides_b]
-    return jax.nn.relu(t + res)
-
-
-# ---------------------------------------------------------------------------
-# model
-# ---------------------------------------------------------------------------
-
-def _stem(params, x, cfg, plan):
-    x = x.astype(params["data_bn"]["scale"].dtype)   # compute dtype of params
-    skip = plan.input_skip if plan is not None else cfg.input_skip
-    if skip > 1:
-        x = x[:, ::skip]                  # C5 input-skipping (frame sampling)
-    N, T, V, C = x.shape
-    h = x.reshape(N, T, V * C)
-    return _bn(h, params["data_bn"]).reshape(N, T, V, C)
-
 
 def forward(
     params: Dict[str, Any],
@@ -219,16 +97,27 @@ def forward(
     cfg: ModelConfig,
     plan: Optional[PrunePlan] = None,
     quant: bool = False,
+    backend: Optional[str] = None,
+    exec_plan=None,
+    interpret: bool = True,
 ) -> jnp.ndarray:
-    """Logits (N, num_classes)."""
-    strides = cfg.gcn_strides or AGCN_STRIDES
-    A = static_graph(cfg.gcn_kv).astype(x.dtype)
-    h = _stem(params, x, cfg, plan)
-    for b, blk in enumerate(params["blocks"]):
-        pb = plan.blocks[b] if plan is not None else None
-        h = _block(h, blk, A, strides[b], pb, cfg.use_ck, quant)
-    pooled = h.mean(axis=(1, 2))                       # (N, C_last)
-    return pooled @ params["fc_w"] + params["fc_b"]
+    """Logits (N, num_classes).
+
+    ``backend`` selects the engine implementation (``reference`` |
+    ``pallas``); ``None`` falls back to ``cfg.gcn_backend``.  A prebuilt
+    ``exec_plan`` (see ``engine.build_execution_plan``) skips plan
+    compilation entirely — the serving hot path; otherwise the plan is
+    compiled here from ``(params, plan, cfg)``, which for the reference
+    backend stays traceable (so the differentiable train path is this same
+    call).  Pallas plans must be compiled outside jit.
+    """
+    from repro.core.agcn import engine
+    if exec_plan is not None:
+        return engine.execute(exec_plan, x)
+    name = backend or cfg.gcn_backend or "reference"
+    ep = engine.build_execution_plan(
+        params, cfg, plan, quant=quant, backend=name, interpret=interpret)
+    return engine.execute(ep, x)
 
 
 def bone_stream(x: jnp.ndarray) -> jnp.ndarray:
@@ -240,22 +129,18 @@ def bone_stream(x: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
-def two_stream_logits(params_joint, params_bone, x, cfg, plan=None, quant=False):
+def two_stream_logits(params_joint, params_bone, x, cfg, plan=None,
+                      quant=False, backend=None):
     """Ensemble of the joint and bone streams (the '2s' in 2s-AGCN)."""
-    lj = forward(params_joint, x, cfg, plan, quant)
-    lb = forward(params_bone, bone_stream(x), cfg, plan, quant)
+    lj = forward(params_joint, x, cfg, plan, quant, backend=backend)
+    lb = forward(params_bone, bone_stream(x), cfg, plan, quant,
+                 backend=backend)
     return 0.5 * (lj + lb)
 
 
 def feature_sparsity_per_block(params, x, cfg, plan=None) -> List[float]:
     """Post-ReLU sparsity per block output — drives RFC mini-bank sizing and
     the Drop-* channel schedules (paper Fig. 9, Table III)."""
-    strides = cfg.gcn_strides or AGCN_STRIDES
-    A = static_graph(cfg.gcn_kv).astype(x.dtype)
-    h = _stem(params, x, cfg, plan)
-    out = []
-    for b, blk in enumerate(params["blocks"]):
-        pb = plan.blocks[b] if plan is not None else None
-        h = _block(h, blk, A, strides[b], pb, cfg.use_ck, False)
-        out.append(float((h == 0).mean()))
-    return out
+    from repro.core.agcn import engine
+    ep = engine.build_execution_plan(params, cfg, plan, backend="reference")
+    return [float((h == 0).mean()) for h in engine.block_outputs(ep, x)]

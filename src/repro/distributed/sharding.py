@@ -62,11 +62,15 @@ def _resolve(axis: Optional[str]) -> Union[None, str, Tuple[str, ...]]:
     spec = _CTX.rules.get(axis)
     if spec is None:
         return None
-    # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+    # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh);
+    # a tuple left with one member normalizes to the bare string so specs
+    # compare equal to hand-written P("data", ...) forms
     names = _CTX.mesh.axis_names
     if isinstance(spec, tuple):
         kept = tuple(s for s in spec if s in names)
-        return kept or None
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
     return spec if spec in names else None
 
 

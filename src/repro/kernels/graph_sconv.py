@@ -57,7 +57,15 @@ def graph_sconv_pallas(
 ) -> jnp.ndarray:
     R, Vp, Cin = x.shape
     K, _, Cout = w.shape
-    r_tile = R_TILE if R % R_TILE == 0 else R
+    if R % R_TILE == 0:
+        r_tile = R_TILE
+    elif R <= R_TILE:
+        r_tile = R                      # single row tile (small batches)
+    else:
+        raise ValueError(
+            f"row axis R={R} exceeds one tile but is not a multiple of "
+            f"R_TILE={R_TILE}; pad the flattened N*T axis (ops.graph_sconv "
+            f"does this) so the grid divides")
     co_tile = CO_TILE if Cout % CO_TILE == 0 else Cout
     grid = (R // r_tile, Cout // co_tile)
 

@@ -122,14 +122,31 @@ def cavity_tconv(
 
 def graph_sconv(
     x: jnp.ndarray,          # (N, T, V, Cin) — kept channels already gathered
-    g: jnp.ndarray,          # (K, V, V)
+    g: jnp.ndarray,          # (K, V, V) or prepadded (K, Vp, Vp) from a plan
     w: jnp.ndarray,          # (K, Cin, Cout)
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Fused Σ_k (G_k·x)·W_k.  Returns (N, T, V, Cout)."""
+    """Fused Σ_k (G_k·x)·W_k.  Returns (N, T, V, Cout).
+
+    Both blocked axes are padded here: joints to the 8-sublane multiple and
+    the flattened N*T row axis to a whole number of row tiles — an odd
+    batch×time product must never reach the kernel as one giant tile (or a
+    non-dividing grid).  ``g`` may arrive already padded to (K, Vp, Vp) from
+    an ExecutionPlan; raw (K, V, V) graphs are padded on the fly.
+    """
+    from repro.kernels.graph_sconv import R_TILE
+
     N, T, V, Cin = x.shape
     Vp = ((V + 7) // 8) * 8                          # sublane-align joints
-    xr = _pad_to(x.reshape(N * T, V, Cin), 1, 8)
-    gp = jnp.zeros((g.shape[0], Vp, Vp), g.dtype).at[:, :V, :V].set(g)
-    out = graph_sconv_pallas(xr, gp, w, interpret=interpret)
-    return out[:, :V, :].reshape(N, T, V, -1)
+    R = N * T
+    xr = _pad_to(x.reshape(R, V, Cin), 1, 8)
+    # row axis: whole tiles when more than one, else one 8-aligned tile
+    xr = _pad_to(xr, 0, R_TILE if R > R_TILE else 8)
+    if g.shape[-1] == V:
+        gp = jnp.zeros((g.shape[0], Vp, Vp), g.dtype).at[:, :V, :V].set(g)
+    elif g.shape[-1] == Vp:
+        gp = g
+    else:
+        raise ValueError(f"graph padded to {g.shape[-1]}, expected {V} or {Vp}")
+    out = graph_sconv_pallas(xr, gp, w.astype(x.dtype), interpret=interpret)
+    return out[:R, :V, :].reshape(N, T, V, -1)

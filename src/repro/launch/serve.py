@@ -1,9 +1,18 @@
-"""Serving driver: batched prefill + decode with the KV cache, greedy or
-top-k sampling.  Runs reduced configs on CPU; the same step functions are
-what the decode_32k / long_500k dry-run cells lower at production shapes.
+"""Serving driver.
+
+LM families: batched prefill + decode with the KV cache, greedy or top-k
+sampling.  Runs reduced configs on CPU; the same step functions are what
+the decode_32k / long_500k dry-run cells lower at production shapes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --batch 4 --prompt-len 16 --gen 32
+
+GCN family: batched clip inference through the execution engine — the
+ExecutionPlans for both streams are compiled once per backend, then a
+jitted two-stream ensemble step drains clip batches and reports clips/s
+for every requested backend (reference and pallas by default).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced
 """
 from __future__ import annotations
 
@@ -16,7 +25,55 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import registry
-from repro.train.steps import make_serve_step
+from repro.train.steps import make_gcn_infer_step, make_serve_step
+
+
+def serve_gcn(arch: str, *, reduced: bool = True, batch: int = 8,
+              clips: int = 64, seed: int = 0, backends=("reference", "pallas")):
+    """Batched skeleton-clip inference: two-stream 2s-AGCN ensemble.
+
+    Compiles one ExecutionPlan per (stream, backend) from the config's
+    pruning plan, jits the ensemble step with the plans as pytree args, and
+    measures steady-state clips/s per backend.  Returns
+    {backend: {"clips_per_s": float, "top1": np.ndarray}}.
+    """
+    from repro.core.agcn import engine
+    from repro.core.pruning.plan import plan_from_config
+    from repro.data.pipeline import DataConfig, skeleton_batches
+
+    cfg = get_config(arch, reduced=reduced)
+    assert cfg.family == "gcn", f"{arch} is not a gcn-family arch"
+    prune_plan = plan_from_config(cfg)
+    kj, kb = jax.random.split(jax.random.PRNGKey(seed))
+    params_joint = registry.init_params(cfg, kj)
+    params_bone = registry.init_params(cfg, kb)
+
+    dcfg = DataConfig(global_batch=batch, seq_len=cfg.gcn_frames, seed=seed)
+    stream = skeleton_batches(cfg, dcfg)
+    batches = [next(stream)["x"] for _ in range(max(1, clips // batch))]
+
+    step = jax.jit(make_gcn_infer_step(cfg))
+    results = {}
+    for backend in backends:
+        plans = tuple(
+            engine.build_execution_plan(
+                p, cfg, prune_plan, quant=True, backend=backend)
+            for p in (params_joint, params_bone))
+        logits = step(plans, jnp.asarray(batches[0]))   # compile
+        jax.block_until_ready(logits)
+        preds, n = [], 0
+        t0 = time.monotonic()
+        for xb in batches:
+            logits = step(plans, jnp.asarray(xb))
+            preds.append(np.asarray(jnp.argmax(logits, -1)))
+            n += xb.shape[0]
+        jax.block_until_ready(logits)
+        dt = time.monotonic() - t0
+        results[backend] = {
+            "clips_per_s": n / dt,
+            "top1": np.concatenate(preds),
+        }
+    return results
 
 
 def generate(arch: str, *, reduced: bool = True, batch: int = 4,
@@ -24,7 +81,7 @@ def generate(arch: str, *, reduced: bool = True, batch: int = 4,
              greedy: bool = True, temperature: float = 1.0):
     cfg = get_config(arch, reduced=reduced)
     if cfg.family == "gcn":
-        raise ValueError("gcn family has no autoregressive serving")
+        raise ValueError("gcn family serving goes through serve_gcn()")
     key = jax.random.PRNGKey(seed)
     params = registry.init_params(cfg, key)
     max_len = prompt_len + gen
@@ -59,14 +116,35 @@ def generate(arch: str, *, reduced: bool = True, batch: int = 4,
 
 
 def main():
+    from repro.core.agcn.engine import BACKENDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=0)   # 0 -> family default
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--clips", type=int, default=64,
+                    help="gcn: total clips to drain per backend")
+    ap.add_argument("--backend", default="both", choices=(*BACKENDS, "both"),
+                    help="gcn: engine backend(s) to serve with")
     args = ap.parse_args()
-    seqs, tps = generate(args.arch, reduced=args.reduced, batch=args.batch,
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if cfg.family == "gcn":
+        backends = BACKENDS if args.backend == "both" else (args.backend,)
+        res = serve_gcn(args.arch, reduced=args.reduced,
+                        batch=args.batch or 8, clips=args.clips,
+                        backends=backends)
+        for name, r in res.items():
+            print(f"backend={name}: {r['clips_per_s']:.1f} clips/s "
+                  f"({len(r['top1'])} clips, 2-stream ensemble)")
+        if len(res) == 2:
+            a, b = (res[k]["top1"] for k in ("reference", "pallas"))
+            agree = float((a == b).mean())
+            print(f"backend top-1 agreement: {agree*100:.1f}%")
+        return
+    seqs, tps = generate(args.arch, reduced=args.reduced,
+                         batch=args.batch or 4,
                          prompt_len=args.prompt_len, gen=args.gen)
     print(f"generated {seqs.shape} tokens at {tps:.1f} tok/s")
     print("sample:", seqs[0, : args.prompt_len + 8].tolist())

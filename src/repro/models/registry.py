@@ -59,7 +59,12 @@ def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
         if inference:                      # paper prunes the deployed model;
             from repro.core.pruning.plan import plan_from_config
             plan = plan_from_config(cfg)   # training runs the dense graph
-        logits = agcn.forward(params, batch["x"], cfg, plan=plan)
+        # always the reference backend here: loss_fn is jitted by its
+        # callers, and pallas ExecutionPlans must be compiled outside the
+        # trace — pallas inference goes through prebuilt plans instead
+        # (steps.make_gcn_infer_step / launch.serve.serve_gcn)
+        logits = agcn.forward(params, batch["x"], cfg, plan=plan,
+                              backend="reference")
         loss = _xent(logits, batch["labels"], cfg.gcn_num_classes)
         acc = (logits.argmax(-1) == batch["labels"]).mean()
         return loss, {"loss": loss, "acc": acc}

@@ -75,6 +75,27 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     return train_step
 
 
+def make_gcn_infer_step(cfg: ModelConfig) -> Callable:
+    """Batched GCN inference step over prebuilt ExecutionPlans.
+
+    Returns ``step(plans, x) -> logits`` where ``plans`` is a tuple of one
+    (joint) or two (joint, bone) engine ExecutionPlans.  The plans ride as
+    pytree *arguments*, so the jit cache is keyed on their shapes/static
+    metadata — rebuilding an identical plan never retraces, and no packing
+    happens inside the step (engine invariant, tested in test_engine.py).
+    """
+    from repro.core.agcn import engine
+    from repro.core.agcn.model import bone_stream
+
+    def infer_step(plans, x):
+        logits = engine.execute(plans[0], x)
+        if len(plans) > 1:
+            logits = 0.5 * (logits + engine.execute(plans[1], bone_stream(x)))
+        return logits
+
+    return infer_step
+
+
 def make_serve_step(cfg: ModelConfig) -> Callable:
     def serve_step(params, cache, batch):
         logits, new_cache = registry.serve_fn(params, batch, cache, cfg)

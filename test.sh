@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the exact pytest line CI and the PR driver run.
+# CPU-only container: pin the platform so jax never probes for TPU.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export JAX_PLATFORMS=cpu
+
+python -m pytest -x -q "$@"

@@ -1,0 +1,49 @@
+"""Optional-dependency guard for hypothesis (listed as the `test` extra).
+
+When hypothesis is installed this re-exports the real ``given`` /
+``settings`` / ``strategies``.  When it is missing, the stubs below make
+property-based tests *skip at run time* (via ``pytest.importorskip``)
+while the rest of each module still collects and runs — the seed behavior
+was five whole-module ``ModuleNotFoundError`` collection errors.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Stub:
+        """Stands in for strategy objects and their combinators — any call
+        or attribute chain yields another stub, so module-level strategy
+        expressions evaluate without the real library."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            if name == "composite":
+                # @st.composite functions become stub factories; the real
+                # body never runs (its @given consumer is skipped anyway)
+                return lambda fn: _Stub()
+            return _Stub()
+
+    st = _Strategies()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.importorskip("hypothesis")
+            _skipped.__name__ = getattr(fn, "__name__", "property_test")
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

@@ -1,0 +1,130 @@
+"""Execution-engine tests: full-model reference↔pallas parity (dense,
+pruned+quantized, RFC-roundtrip variants) on the reduced 4-block config,
+and ExecutionPlan compile invariants (pure/idempotent build, jit-cache
+friendliness, no re-packing inside the jitted step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.agcn import engine
+from repro.core.agcn import model as M
+from repro.core.pruning.plan import build_prune_plan
+from repro.train.steps import make_gcn_infer_step
+
+CFG = get_config("agcn-2s", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (4, CFG.gcn_frames, 25, 3))
+
+
+@pytest.fixture(scope="module")
+def prune_plan(params):
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    return build_prune_plan(sw, CFG.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                            "cav-70-1", input_skip=2)
+
+
+def _assert_logits_close(a, b, atol=1e-3):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=1e-3)
+
+
+# ------------------------------------------------------------------ parity
+
+def test_backend_parity_dense(params, x):
+    ref = M.forward(params, x, CFG, backend="reference")
+    pal = M.forward(params, x, CFG, backend="pallas")
+    _assert_logits_close(ref, pal)
+
+
+def test_backend_parity_pruned_quantized(params, x, prune_plan):
+    ref = M.forward(params, x, CFG, plan=prune_plan, quant=True,
+                    backend="reference")
+    pal = M.forward(params, x, CFG, plan=prune_plan, quant=True,
+                    backend="pallas")
+    _assert_logits_close(ref, pal)
+
+
+def test_rfc_roundtrip_is_exact_interlayer_format(params, x, prune_plan):
+    """RFC encode/decode between blocks is lossless on post-ReLU
+    activations — the pallas inter-layer format changes no logits."""
+    with_rfc = engine.build_execution_plan(
+        params, CFG, prune_plan, backend="pallas", use_rfc=True)
+    without = engine.build_execution_plan(
+        params, CFG, prune_plan, backend="pallas", use_rfc=False)
+    assert with_rfc.static.use_rfc and not without.static.use_rfc
+    _assert_logits_close(engine.execute(with_rfc, x),
+                         engine.execute(without, x), atol=1e-5)
+
+
+def test_forward_accepts_prebuilt_plan(params, x):
+    ep = engine.build_execution_plan(params, CFG, backend="pallas")
+    direct = engine.execute(ep, x)
+    via_forward = M.forward(params, x, CFG, exec_plan=ep)
+    _assert_logits_close(direct, via_forward, atol=0)
+
+
+# ------------------------------------------------------------ plan compile
+
+def test_plan_build_is_pure_and_idempotent(params):
+    p1 = engine.build_execution_plan(params, CFG, backend="pallas")
+    p2 = engine.build_execution_plan(params, CFG, backend="pallas")
+    assert p1.static == p2.static
+    l1, l2 = jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_jitted_step_does_not_retrace_on_rebuilt_plan(params, x):
+    """Plans ride as pytree args: a rebuilt (identical) plan must hit the
+    same jit cache entry — all packing happened at build time."""
+    traces = []
+    step = make_gcn_infer_step(CFG)
+
+    @jax.jit
+    def counted(plans, xx):
+        traces.append(1)
+        return step(plans, xx)
+
+    p1 = engine.build_execution_plan(params, CFG, backend="pallas")
+    p2 = engine.build_execution_plan(params, CFG, backend="pallas")
+    a = counted((p1,), x)
+    b = counted((p2,), x)
+    assert len(traces) == 1
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pallas_plan_cannot_be_built_inside_jit(params, x):
+    """Cavity packing is host-side by design: tracing a pallas plan build
+    raises instead of silently re-packing inside the step."""
+    def bad_step(p, xx):
+        ep = engine.build_execution_plan(p, CFG, backend="pallas")
+        return engine.execute(ep, xx)
+
+    with pytest.raises(ValueError, match="outside jit"):
+        jax.jit(bad_step)(params, x)
+
+
+def test_unknown_backend_rejected(params):
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.build_execution_plan(params, CFG, backend="cuda")
+
+
+def test_two_stream_step_matches_model_ensemble(params, x):
+    pb = M.init_params(CFG, jax.random.PRNGKey(7))
+    plans = tuple(engine.build_execution_plan(p, CFG, backend="reference")
+                  for p in (params, pb))
+    step = jax.jit(make_gcn_infer_step(CFG))
+    got = step(plans, x)
+    want = M.two_stream_logits(params, pb, x, CFG)
+    _assert_logits_close(got, want, atol=1e-5)

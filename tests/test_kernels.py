@@ -58,6 +58,9 @@ def test_cavity_tconv_matches_ref(pattern, F, C, T, stride):
 
 @pytest.mark.parametrize("R,V,Ci,Co,K", [
     (32, 25, 16, 32, 3), (64, 25, 64, 64, 3), (16, 25, 3, 8, 3),
+    # odd batch×time products: row axis > one tile and not a tile multiple
+    # must be padded by ops.graph_sconv, not handed to the grid raw
+    (260, 25, 8, 16, 3), (130, 25, 4, 8, 3),
 ])
 def test_graph_sconv_matches_ref(R, V, Ci, Co, K):
     k = jax.random.PRNGKey(R + Ci)

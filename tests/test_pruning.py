@@ -2,7 +2,7 @@
 magnitude channel selection, coarse/fine plan accounting vs paper claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional test extra
 
 from repro.core.pruning.cavity import balance_stats, cavity_pattern, tile_pattern
 from repro.core.pruning.plan import (

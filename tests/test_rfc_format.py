@@ -1,7 +1,7 @@
 """Property-based tests (hypothesis) for the RFC format invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional test extra
 
 from repro.core.rfc.format import (
     expected_sparsity_categories, mbhot, minibank_depths, rfc_decode,

@@ -1,7 +1,7 @@
 """Dynamic-scheduling expectation model (paper eq. 6 / Table II)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional test extra
 
 from repro.core.sched.expectation import (
     delay_probability, dsp_allocation, expected_valid, scheduling_report,

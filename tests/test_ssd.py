@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional test extra
 
 from repro.models.layers.mamba2 import mamba2_init, mamba2_layer
 from repro.models.layers.ssd import ssd_scan, ssd_step
