@@ -13,9 +13,16 @@ import jax
 
 ROWS: List[Dict] = []
 
+# --smoke (benchmarks.run): one timed iteration, no warmup — CI's guard
+# that every module still runs end-to-end and emits its BENCH json rows
+# (wall-clock numbers in smoke mode are *not* comparable across runs).
+SMOKE = False
+
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time in microseconds of a jitted callable."""
+    if SMOKE:
+        warmup, iters = 0, 1
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

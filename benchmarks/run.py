@@ -6,7 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
 With ``--only MODULE`` the module's rows are also written to
 ``BENCH_<MODULE>.json`` (e.g. ``--only kernels_bench`` →
 ``BENCH_kernels_bench.json`` with the backend-comparison rows); ``--json``
-forces the dump for a full run (one file per module).
+forces the dump for a full run (one file per module).  ``--smoke`` times a
+single iteration per row — ``test.sh`` runs ``--only kernels --smoke`` so
+the json emission path cannot silently rot.
 """
 from __future__ import annotations
 
@@ -34,8 +36,13 @@ def main() -> None:
                     help="run one module (accepts 'kernels' for kernels_bench)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<module>.json for every module run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single timed iteration per row (fast end-to-end "
+                         "check that BENCH json emission still works)")
     # unknown flags (e.g. --backend) pass through to the modules' own parsers
     args, _ = ap.parse_known_args()
+    if args.smoke:
+        common.SMOKE = True
     only = args.only
     if only and only not in MODULES and f"{only}_bench" in MODULES:
         only = f"{only}_bench"           # `--only kernels` shorthand

@@ -86,6 +86,12 @@ class ModelConfig:
     input_skip: int = 1                    # keep 1 of every `input_skip` frames
     rfc_bank: int = 16                     # RFC bank width (C3)
     rfc_minibank: int = 4                  # RFC mini-bank depth granularity
+    gcn_stream_pool: int = 0               # streaming logit pool: 0 = running
+                                           # mean over every emitted frame
+                                           # (clip-parity contract); W > 0 =
+                                           # sliding window of the last W
+                                           # emitted frames (live streams
+                                           # where the action changes)
     gcn_backend: str = "reference"         # engine backend: reference | pallas.
                                            # Default for eager forward() calls;
                                            # jitted steps (train/loss_fn) always

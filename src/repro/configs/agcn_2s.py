@@ -18,6 +18,9 @@ CONFIG = ModelConfig(
     prune_channel_fracs=(1.0, 0.6, 0.6, 0.55, 0.5, 0.5, 0.45, 0.4, 0.35, 0.3),
     # engine backend for inference paths (serve/bench); --backend overrides
     gcn_backend="reference",
+    # streaming (serve --stream): cumulative logit pool reproduces the
+    # clip engine exactly post-drain; set W>0 for a sliding live window
+    gcn_stream_pool=0,
     # perf: 3.5M params -> replicate weights, model axis = extra DP
     # (EXPERIMENTS.md §Perf, agcn hillclimb iteration 1)
     sharding="dp_only",
@@ -34,4 +37,5 @@ REDUCED = ModelConfig(
     gcn_kv=3, gcn_tkernel=9,
     cavity_pattern="cav-70-1", input_skip=2,
     gcn_backend="reference",
+    gcn_stream_pool=0,          # streaming↔clip parity (test_streaming.py)
 )

@@ -26,6 +26,11 @@ strides and flags live in the hashable static aux.
 Pallas plans must be built **outside** jit: cavity weight packing
 (``ops.pack_cavity_weights``) is host-side numpy by design — that is the
 "compile" in plan-compile-then-execute.
+
+Besides clip mode (``execute``), every plan also runs **streaming**: per-
+frame continual inference through ``step_frame`` against a ``StreamState``
+of per-block temporal ring buffers — see the streaming section below and
+tests/test_streaming.py for the clip-parity contract.
 """
 from __future__ import annotations
 
@@ -55,6 +60,7 @@ class BlockStatic:
     as python constants)."""
 
     stride: int
+    cin: int                 # full block-input width (pre kept_in gather)
     cout: int
     n_kept_filters: int
     tkernel: int
@@ -71,6 +77,10 @@ class PlanStatic:
     use_rfc: bool            # RFC roundtrip between blocks (pallas format)
     rfc_bank: int
     tkernel: int
+    joints: int
+    in_channels: int
+    stream_pool: int         # streaming logit pool: 0 = cumulative (clip
+                             # parity), W > 0 = sliding window of W frames
     blocks: Tuple[BlockStatic, ...]
 
 
@@ -99,21 +109,63 @@ class ExecutionPlan:
 # shared math (used by both backends and by the legacy-compatible paths)
 # ---------------------------------------------------------------------------
 
-def batch_norm(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
-               eps: float = 1e-5) -> jnp.ndarray:
-    """Stateless batch norm: f32-accumulated stats, elementwise math in the
-    activation dtype (see model.py docstring / EXPERIMENTS §Perf)."""
+def _bn_stats(x: jnp.ndarray, eps: float = 1e-5):
+    """(mean, inv) over all-but-channel axes — the clip-mode batch stats."""
     axes = tuple(range(x.ndim - 1))
     mean = jnp.mean(x, axes, keepdims=True)
     var = jnp.var(x, axes, keepdims=True)
     inv = jax.lax.rsqrt(var.astype(jnp.float32) + eps).astype(x.dtype)
+    return mean, inv
+
+
+def _bn_norm(x, p, mean, inv):
     return (x - mean) * inv * p["scale"] + p["bias"]
 
 
-def _proj(x, w, bn, stride):
+def batch_norm(x: jnp.ndarray, p: Dict[str, jnp.ndarray],
+               eps: float = 1e-5) -> jnp.ndarray:
+    """Stateless batch norm: f32-accumulated stats, elementwise math in the
+    activation dtype (see model.py docstring / EXPERIMENTS §Perf)."""
+    mean, inv = _bn_stats(x, eps)
+    return _bn_norm(x, p, mean, inv)
+
+
+def _bn_live(site: str, x, p):
+    """Default BN tap: clip-mode batch statistics, site ignored."""
+    return batch_norm(x, p)
+
+
+class _BNRecorder:
+    """BN tap that captures each site's (mean, inv) while behaving exactly
+    like the live tap — the calibration pass behind streaming's frozen
+    statistics (per-frame BN cannot see clip-wide stats)."""
+
+    def __init__(self):
+        self.stats: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+    def __call__(self, site, x, p):
+        mean, inv = _bn_stats(x)
+        self.stats[site] = {"mean": mean.reshape(-1), "inv": inv.reshape(-1)}
+        return _bn_norm(x, p, mean, inv)
+
+
+class _BNFrozen:
+    """BN tap applying previously recorded statistics (streaming hot path).
+    Flat (C,) stats broadcast over any leading layout, so the same stats
+    serve clip (N,T,V,C) and frame (N,V,C) shapes."""
+
+    def __init__(self, stats: Dict[str, Dict[str, jnp.ndarray]]):
+        self.stats = stats
+
+    def __call__(self, site, x, p):
+        s = self.stats[site]
+        return _bn_norm(x, p, s["mean"], s["inv"])
+
+
+def _proj(x, w, bnp, stride, bn=_bn_live, site=""):
     if stride != 1:
         x = x[:, ::stride]
-    return batch_norm(jnp.einsum("ntvc,co->ntvo", x, w), bn)
+    return bn(site, jnp.einsum("ntvc,co->ntvo", x, w), bnp)
 
 
 def _scatter_filters(out: jnp.ndarray, fidx: jnp.ndarray, cout: int):
@@ -138,6 +190,9 @@ class Backend(Protocol):
 
     def temporal(self, x: jnp.ndarray, ba: Dict[str, Any],
                  bs: BlockStatic) -> jnp.ndarray: ...
+
+    def temporal_step(self, win: jnp.ndarray, ba: Dict[str, Any],
+                      bs: BlockStatic) -> jnp.ndarray: ...
 
     def transfer(self, h: jnp.ndarray, ps: PlanStatic) -> jnp.ndarray: ...
 
@@ -185,6 +240,16 @@ class ReferenceBackend:
             out = _scatter_filters(out, ba["kept_filters"], bs.cout)
         return out
 
+    def temporal_step(self, win, ba, bs):
+        """One output frame from a chronological window (N, K, V, C) —
+        the streaming form of ``temporal`` (stride is emission gating,
+        handled by the engine; the window always yields one output)."""
+        w = ba["tw"].astype(win.dtype)                # (F_kept, C, K)
+        out = jnp.einsum("nkvc,fck->nvf", win, w) + ba["tb"]
+        if bs.pruned_filters:
+            out = _scatter_filters(out, ba["kept_filters"], bs.cout)
+        return out
+
     def transfer(self, h, ps):
         return h
 
@@ -221,6 +286,20 @@ class PallasBackend:
         out = jnp.transpose(
             out.reshape(N, V, T_out, -1), (0, 2, 1, 3))
         out = out + ba["tb"]
+        if bs.pruned_filters:
+            out = _scatter_filters(out, ba["kept_filters"], bs.cout)
+        return out
+
+    def temporal_step(self, win, ba, bs):
+        """Single-timestep packed cavity tconv on a chronological window
+        (N, K, V, C) — the same packed weights/taps, T_pad == K."""
+        N, K, V, C = win.shape
+        xb = jnp.transpose(win, (0, 2, 1, 3)).reshape(N * V, K, C)
+        out = ops.cavity_tconv_step(
+            xb, ba["wp"], ba["taps"], ba["inv_perm"],
+            num_filters=bs.n_kept_filters, interpret=self.interpret,
+        )                                             # (N*V, F_kept)
+        out = out.reshape(N, V, -1) + ba["tb"]
         if bs.pruned_filters:
             out = _scatter_filters(out, ba["kept_filters"], bs.cout)
         return out
@@ -292,6 +371,7 @@ def build_execution_plan(
     for b, blk in enumerate(params["blocks"]):
         pb = prune_plan.blocks[b] if prune_plan is not None else None
         cout = int(blk["tconv_w"].shape[0])
+        cin_full = int(blk["Wk"].shape[1])            # pre-gather block input
         use_ck = bool(cfg.use_ck and "theta" in blk)
 
         # --- spatial: graph precompute + kept-channel gather + quant ------
@@ -353,7 +433,8 @@ def build_execution_plan(
 
         blocks_a.append(ba)
         blocks_s.append(BlockStatic(
-            stride=int(strides[b]), cout=cout, n_kept_filters=n_kept,
+            stride=int(strides[b]), cin=cin_full, cout=cout,
+            n_kept_filters=n_kept,
             tkernel=int(cfg.gcn_tkernel), use_ck=use_ck,
             pruned_in=kept_in is not None,
             pruned_filters=kept_filters is not None,
@@ -367,6 +448,8 @@ def build_execution_plan(
         backend=backend, interpret=bool(interpret),
         input_skip=int(input_skip), use_rfc=bool(use_rfc),
         rfc_bank=int(cfg.rfc_bank), tkernel=int(cfg.gcn_tkernel),
+        joints=int(V), in_channels=int(cfg.gcn_in_channels),
+        stream_pool=int(cfg.gcn_stream_pool),
         blocks=tuple(blocks_s),
     )
     arrays = {
@@ -378,28 +461,29 @@ def build_execution_plan(
 
 
 # ---------------------------------------------------------------------------
-# execution
+# execution (clip mode)
 # ---------------------------------------------------------------------------
 
-def _stem(arrays, x, input_skip: int) -> jnp.ndarray:
+def _stem(arrays, x, input_skip: int, bn=_bn_live) -> jnp.ndarray:
     x = x.astype(arrays["data_bn"]["scale"].dtype)
     if input_skip > 1:
         x = x[:, ::input_skip]            # C5 input-skipping (frame sampling)
     N, T, V, C = x.shape
     h = x.reshape(N, T, V * C)
-    return batch_norm(h, arrays["data_bn"]).reshape(N, T, V, C)
+    return bn("data_bn", h, arrays["data_bn"]).reshape(N, T, V, C)
 
 
-def _run_block(h, ba, bs, backend: Backend):
+def _run_block(h, ba, bs, backend: Backend, bn=_bn_live, tag: str = ""):
     s = backend.spatial(h, ba, bs)
-    s = batch_norm(s, ba["bn_s"])
-    down = (_proj(h, ba["down_w"], ba["bn_down"], 1)
+    s = bn(tag + "bn_s", s, ba["bn_s"])
+    down = (_proj(h, ba["down_w"], ba["bn_down"], 1, bn, tag + "bn_down")
             if ba["down_w"] is not None else h)
     s = jax.nn.relu(s + down)
     t = backend.temporal(s, ba, bs)
-    t = batch_norm(t, ba["bn_t"])
+    t = bn(tag + "bn_t", t, ba["bn_t"])
     if ba["short_w"] is not None:
-        res = _proj(h, ba["short_w"], ba["bn_short"], bs.stride)
+        res = _proj(h, ba["short_w"], ba["bn_short"], bs.stride, bn,
+                    tag + "bn_short")
     else:
         res = h if bs.stride == 1 else h[:, ::bs.stride]
     return jax.nn.relu(t + res)
@@ -420,15 +504,269 @@ def block_outputs(plan: ExecutionPlan, x: jnp.ndarray) -> List[jnp.ndarray]:
     return outs
 
 
-def execute(plan: ExecutionPlan, x: jnp.ndarray) -> jnp.ndarray:
-    """Run the compiled plan on a clip batch (N, T, V, C) -> logits."""
+def _forward(plan: ExecutionPlan, x: jnp.ndarray, bn) -> jnp.ndarray:
     backend = get_backend(plan.static.backend, plan.static.interpret)
-    h = _stem(plan.arrays, x, plan.static.input_skip)
+    h = _stem(plan.arrays, x, plan.static.input_skip, bn)
     nblocks = len(plan.static.blocks)
     for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"],
                                      plan.static.blocks)):
-        h = _run_block(h, ba, bs, backend)
+        h = _run_block(h, ba, bs, backend, bn, tag=f"b{b}/")
         if b < nblocks - 1:
             h = backend.transfer(h, plan.static)
     pooled = h.mean(axis=(1, 2))                       # (N, C_last)
     return pooled @ plan.arrays["fc_w"] + plan.arrays["fc_b"]
+
+
+def execute(plan: ExecutionPlan, x: jnp.ndarray) -> jnp.ndarray:
+    """Run the compiled plan on a clip batch (N, T, V, C) -> logits."""
+    return _forward(plan, x, _bn_live)
+
+
+def collect_bn_stats(plan: ExecutionPlan, x: jnp.ndarray
+                     ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Run one clip batch through the plan's own backend, recording every
+    batch-norm site's (mean, inv) — the frozen statistics that let the
+    streaming path reproduce clip logits (per-frame BN cannot see clip-wide
+    stats).  Call outside jit: the recorder mutates a host-side dict."""
+    rec = _BNRecorder()
+    _forward(plan, x, rec)
+    return rec.stats
+
+
+# ---------------------------------------------------------------------------
+# execution (streaming mode) — per-frame continual inference
+# ---------------------------------------------------------------------------
+#
+# The same compiled plan runs frame-by-frame with stateful temporal rings:
+# each block holds the last K(=tkernel) spatial outputs (its tconv input)
+# plus the last K block inputs (residual source), and emits one output
+# whenever the just-arrived frame completes a clip-mode window — every
+# ``stride``-th input, ``pad = K//2`` frames behind real time (the clip
+# conv's 'same' padding becomes a per-block latency).  Invalid frames
+# (input-skip gaps, post-clip flush) write *zeros* into the tconv ring,
+# which is exactly the clip conv's zero padding, so post-drain streaming
+# logits equal clip logits (tests/test_streaming.py).  RFC encode/decode is
+# applied to every emitted inter-block frame (pallas), and the running
+# encoded activations live in the state.
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StreamState:
+    """Pytree state of one AGCN stream (one batch of live skeletons).
+
+    ``blocks[b]``: ring_s (N, K, V, cout) tconv-input ring, ring_h
+    (N, K, V, cin) residual-source ring, valid (K,) clip-validity bits,
+    t () int32 inputs seen at this block's time scale.  ``pool_*`` hold the
+    running temporal logit pool; ``bn_stats`` the frozen calibration;
+    ``rfc`` the running RFC-encoded inter-block activations (pallas)."""
+
+    t_raw: Any
+    blocks: List[Dict[str, Any]]
+    pool_ring: Any
+    pool_sum: Any
+    pool_t: Any
+    bn_stats: Dict[str, Dict[str, Any]]
+    rfc: Optional[List[Dict[str, Any]]]
+
+    def tree_flatten(self):
+        return ((self.t_raw, self.blocks, self.pool_ring, self.pool_sum,
+                 self.pool_t, self.bn_stats, self.rfc), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_stream_state(
+    plan: ExecutionPlan,
+    batch: int,
+    *,
+    x_calib: Optional[jnp.ndarray] = None,
+    bn_stats: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None,
+    dtype=jnp.float32,
+) -> StreamState:
+    """Fresh zeroed StreamState for ``batch`` concurrent skeleton streams.
+
+    Streaming needs frozen batch-norm statistics: pass ``x_calib`` (a
+    representative clip batch — the stats are recorded from one clip-mode
+    pass of this plan's own backend) or precomputed ``bn_stats`` from
+    :func:`collect_bn_stats`."""
+    ps = plan.static
+    if any(bs.use_ck for bs in ps.blocks):
+        raise NotImplementedError(
+            "streaming requires use_ck=False — the data-dependent C_k graph "
+            "pools over the clip's time axis (the paper drops C_k at "
+            "deployment, Table I)")
+    if bn_stats is None:
+        if x_calib is None:
+            raise ValueError(
+                "streaming needs frozen BN statistics: pass x_calib (a "
+                "representative clip batch) or bn_stats from "
+                "collect_bn_stats()")
+        bn_stats = collect_bn_stats(plan, x_calib)
+    K, V = ps.tkernel, ps.joints
+    blocks = []
+    for bs in ps.blocks:
+        blocks.append({
+            "ring_s": jnp.zeros((batch, K, V, bs.cout), dtype),
+            "ring_h": jnp.zeros((batch, K, V, bs.cin), dtype),
+            "valid": jnp.zeros((K,), bool),
+            "t": jnp.zeros((), jnp.int32),
+        })
+    c_last = ps.blocks[-1].cout
+    rfc = None
+    if ps.use_rfc:
+        rfc = [{"vals": jnp.zeros((batch, V, bs.cout), dtype),
+                "hot": jnp.zeros((batch, V, bs.cout), dtype)}
+               for bs in ps.blocks[:-1]]
+    pool_ring = (jnp.zeros((batch, ps.stream_pool, c_last), dtype)
+                 if ps.stream_pool > 0 else None)
+    return StreamState(
+        t_raw=jnp.zeros((), jnp.int32), blocks=blocks,
+        pool_ring=pool_ring, pool_sum=jnp.zeros((batch, c_last), dtype),
+        pool_t=jnp.zeros((), jnp.int32), bn_stats=bn_stats, rfc=rfc)
+
+
+def stream_flush_frames(plan: ExecutionPlan, frames: int) -> int:
+    """Raw flush steps (zero frames, valid=False) needed after a ``frames``-
+    long clip so the final valid output drains through every block's
+    ``pad``-frame latency — after which streaming logits equal clip logits."""
+    ps = plan.static
+    pad = ps.tkernel // 2
+    t = -(-frames // ps.input_skip)            # frames surviving input skip
+    for bs in ps.blocks:
+        t = (t - 1) // bs.stride + 1           # clip-mode output length
+    o = t - 1                                  # last valid final-block output
+    for bs in reversed(ps.blocks):
+        o = o * bs.stride + pad                # input index that triggers it
+    total = o * ps.input_skip + 1
+    return max(0, total - frames)
+
+
+def _stem_frame(arrays, frame: jnp.ndarray, bn) -> jnp.ndarray:
+    """Per-frame stem: data_bn on one (N, V, C) frame with frozen stats."""
+    x = frame.astype(arrays["data_bn"]["scale"].dtype)
+    N, V, C = x.shape
+    h = x.reshape(N, V * C)
+    return bn("data_bn", h, arrays["data_bn"]).reshape(N, V, C)
+
+
+def step_frame(
+    plan: ExecutionPlan,
+    state: StreamState,
+    frame: jnp.ndarray,              # (N, V, C) one raw skeleton frame
+    valid=True,                      # False -> flush step (post-clip drain)
+) -> Tuple[StreamState, jnp.ndarray]:
+    """Advance every stream by one raw frame; returns (state, logits).
+
+    Pure and jit-stable: the plan and state ride as pytree arguments, all
+    data-dependent control (input-skip gaps, stride-decimated emission,
+    clip-validity of flushed windows) is traced masking — one compilation
+    per ExecutionPlan serves the whole stream."""
+    ps = plan.static
+    backend = get_backend(ps.backend, ps.interpret)
+    bn = _BNFrozen(state.bn_stats)
+    K = ps.tkernel
+    pad = K // 2
+    nblocks = len(ps.blocks)
+
+    process = (state.t_raw % ps.input_skip) == 0      # C5 input skipping
+    has_input = process
+    in_valid = jnp.logical_and(jnp.asarray(valid), process)
+    h_in = _stem_frame(plan.arrays, frame, bn)
+
+    new_blocks: List[Dict[str, Any]] = []
+    new_rfc: List[Dict[str, Any]] = []
+    emit = has_input
+    out = h_in
+    out_valid = in_valid
+    for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"], ps.blocks)):
+        sb = state.blocks[b]
+        tag = f"b{b}/"
+        t = sb["t"]
+
+        # --- frame-local gcn unit (spatial graph conv + down residual) ----
+        s = backend.spatial(h_in[:, None], ba, bs)[:, 0]
+        s = bn(tag + "bn_s", s, ba["bn_s"])
+        down = (bn(tag + "bn_down",
+                   jnp.einsum("nvc,co->nvo", h_in, ba["down_w"]),
+                   ba["bn_down"])
+                if ba["down_w"] is not None else h_in)
+        s = jax.nn.relu(s + down)
+        # invalid inputs become the clip conv's zero padding at this level
+        s = jnp.where(in_valid, s, 0.0)
+
+        # --- masked ring write -------------------------------------------
+        slot = t % K
+        ring_s = jnp.where(has_input, sb["ring_s"].at[:, slot].set(s),
+                           sb["ring_s"])
+        ring_h = jnp.where(has_input, sb["ring_h"].at[:, slot].set(h_in),
+                           sb["ring_h"])
+        vring = jnp.where(has_input, sb["valid"].at[slot].set(in_valid),
+                          sb["valid"])
+        t_new = t + has_input.astype(jnp.int32)
+        new_blocks.append({"ring_s": ring_s, "ring_h": ring_h,
+                           "valid": vring, "t": t_new})
+
+        # --- stride-decimated emission -----------------------------------
+        # output o of the clip conv completes when input t = o*stride + pad
+        # arrives; its center tap (and residual source) is input t - pad
+        emit = jnp.logical_and(
+            has_input,
+            jnp.logical_and(t >= pad, (t - pad) % bs.stride == 0))
+        idx = (t + 1 + jnp.arange(K)) % K              # chronological window
+        win = jnp.take(ring_s, idx, axis=1)
+        out = backend.temporal_step(win, ba, bs)
+        out = bn(tag + "bn_t", out, ba["bn_t"])
+        center = (t - pad) % K
+        h_c = jnp.take(ring_h, center, axis=1)
+        if ba["short_w"] is not None:
+            res = bn(tag + "bn_short",
+                     jnp.einsum("nvc,co->nvo", h_c, ba["short_w"]),
+                     ba["bn_short"])
+        else:
+            res = h_c
+        out = jax.nn.relu(out + res)
+        out_valid = jnp.take(vring, center)
+
+        # --- inter-block transfer: the RFC format, frame-wise -------------
+        if b < nblocks - 1:
+            if ps.use_rfc:
+                vals, hot = ops.rfc_encode(out, bank=ps.rfc_bank,
+                                           interpret=ps.interpret)
+                old = state.rfc[b]
+                new_rfc.append(
+                    {"vals": jnp.where(emit, vals, old["vals"]),
+                     "hot": jnp.where(emit, hot, old["hot"])})
+                out = ops.rfc_decode(vals, hot, bank=ps.rfc_bank,
+                                     interpret=ps.interpret)
+            h_in = out
+        has_input = emit
+        in_valid = out_valid
+
+    # --- running temporal logit pool -------------------------------------
+    take = jnp.logical_and(emit, out_valid)
+    contrib = out.mean(axis=1)                         # (N, C_last): V pooled
+    if ps.stream_pool > 0:
+        W = ps.stream_pool
+        pslot = state.pool_t % W
+        pool_ring = jnp.where(
+            take, state.pool_ring.at[:, pslot].set(contrib), state.pool_ring)
+        # recompute from the ring (W is small): a running add/subtract
+        # would accumulate rounding drift over an unbounded live stream
+        pool_sum = pool_ring.sum(axis=1)
+        pool_t = state.pool_t + take.astype(jnp.int32)
+        n_eff = jnp.minimum(pool_t, W)
+    else:
+        pool_ring = None
+        pool_sum = state.pool_sum + jnp.where(take, contrib, 0.0)
+        pool_t = state.pool_t + take.astype(jnp.int32)
+        n_eff = pool_t
+    pooled = pool_sum / jnp.maximum(n_eff, 1).astype(pool_sum.dtype)
+    logits = pooled @ plan.arrays["fc_w"] + plan.arrays["fc_b"]
+
+    new_state = StreamState(
+        t_raw=state.t_raw + 1, blocks=new_blocks, pool_ring=pool_ring,
+        pool_sum=pool_sum, pool_t=pool_t, bn_stats=state.bn_stats,
+        rfc=new_rfc if ps.use_rfc else None)
+    return new_state, logits

@@ -120,6 +120,34 @@ def forward(
     return engine.execute(ep, x)
 
 
+def init_stream(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    x_calib: jnp.ndarray,                 # (N, T, V, C) representative clip
+    plan: Optional[PrunePlan] = None,
+    quant: bool = False,
+    backend: Optional[str] = None,
+    exec_plan=None,
+    interpret: bool = True,
+):
+    """State-init API for per-frame continual inference (engine streaming
+    mode).  Returns ``(exec_plan, StreamState)``.
+
+    ``x_calib`` fixes the stream's batch size and calibrates the frozen
+    batch-norm statistics that make ``engine.step_frame`` reproduce the
+    clip engine post-drain (the streaming correctness contract, locked in
+    tests/test_streaming.py).  A prebuilt ``exec_plan`` skips plan
+    compilation; otherwise one is compiled exactly as in :func:`forward`."""
+    from repro.core.agcn import engine
+    ep = exec_plan
+    if ep is None:
+        name = backend or cfg.gcn_backend or "reference"
+        ep = engine.build_execution_plan(
+            params, cfg, plan, quant=quant, backend=name, interpret=interpret)
+    state = engine.init_stream_state(ep, x_calib.shape[0], x_calib=x_calib)
+    return ep, state
+
+
 def bone_stream(x: jnp.ndarray) -> jnp.ndarray:
     """Second stream of 2s-AGCN: bone vectors = joint − parent joint."""
     from repro.core.agcn.graph import NTU_EDGES

@@ -48,6 +48,53 @@ def _kernel(x_ref, w_ref, taps_ref, out_ref, *, n_keep: int, t_out: int,
     out_ref[...] = acc[:, :, None, :].astype(out_ref.dtype)
 
 
+def _step_kernel(x_ref, w_ref, taps_ref, out_ref, *, n_keep: int):
+    """Single-timestep variant: the window (b_tile, K, C) IS the receptive
+    field, so each group is just ``n_keep`` gathered (C×Fg) matmuls — no
+    temporal slide, no stride (the streaming engine gates emission)."""
+    acc = jnp.zeros((x_ref.shape[0], w_ref.shape[-1]), jnp.float32)
+    for j in range(n_keep):                        # static loop over kept taps
+        off = taps_ref[0, j]
+        xs = pl.load(x_ref, (slice(None), pl.dslice(off, 1), slice(None)))
+        acc += jax.lax.dot_general(
+            xs[:, 0, :], w_ref[0, j], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[...] = acc[:, None, :].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cavity_tconv_step_pallas(
+    x: jnp.ndarray,        # (B, K, C) chronological window, oldest first
+    wp: jnp.ndarray,       # (L, n_keep, C, Fg) — same packing as the clip path
+    taps: jnp.ndarray,     # (L, n_keep) int32
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One output timestep per row from a full K-frame window: (B, L, Fg).
+
+    This is the streaming engine's per-frame temporal conv: the packed
+    cavity weights and tap sets are byte-identical to the clip kernel's, so
+    a plan compiled once serves both dataflows."""
+    B, K, C = x.shape
+    L, n_keep, _, Fg = wp.shape
+    b_tile = B_TILE if B % B_TILE == 0 else B
+    grid = (B // b_tile, L)
+
+    in_spec = pl.BlockSpec((b_tile, K, C), lambda b, g: (b, 0, 0))
+    w_spec = pl.BlockSpec((1, n_keep, C, Fg), lambda b, g: (g, 0, 0, 0))
+    taps_spec = pl.BlockSpec((1, n_keep), lambda b, g: (g, 0))
+    out_spec = pl.BlockSpec((b_tile, 1, Fg), lambda b, g: (b, g, 0))
+
+    return pl.pallas_call(
+        functools.partial(_step_kernel, n_keep=n_keep),
+        grid=grid,
+        in_specs=[in_spec, w_spec, taps_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, L, Fg), x.dtype),
+        interpret=interpret,
+    )(x, wp, taps)
+
+
 @functools.partial(jax.jit, static_argnames=("kernel_size", "stride", "interpret"))
 def cavity_tconv_pallas(
     x: jnp.ndarray,        # (B, T_pad, C)

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.cavity_tconv import cavity_tconv_pallas
+from repro.kernels.cavity_tconv import (cavity_tconv_pallas,
+                                        cavity_tconv_step_pallas)
 from repro.kernels.graph_sconv import graph_sconv_pallas
 from repro.kernels.rfc_pack import rfc_decode_pallas, rfc_encode_pallas
 
@@ -103,9 +104,19 @@ def cavity_tconv(
     stride: int = 1,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Cavity-pruned temporal conv, 'same' padding.  Returns (B, T_out, F)."""
+    """Cavity-pruned temporal conv, 'same' padding.  Returns (B, T_out, F).
+
+    T_out follows conv semantics, ``(T + 2·pad − K)//stride + 1`` — for a
+    stride that doesn't divide the window count (odd T into a stride-2
+    block) the right pad is extended with zeros so the kernel's in-bounds
+    floor count equals it; otherwise reference and pallas would disagree
+    by one trailing output (and streaming parity with them)."""
     pad = kernel_size // 2
-    xp = jnp.pad(x, ((0, 0), (pad, pad), (0, 0)))
+    T = x.shape[1]
+    t_out = (T + 2 * pad - kernel_size) // stride + 1
+    # kernel needs K-1 + t_out·stride rows; ≥ T + 2·pad, equal iff divisible
+    t_pad = kernel_size - 1 + t_out * stride
+    xp = jnp.pad(x, ((0, 0), (pad, t_pad - T - pad), (0, 0)))
     out = cavity_tconv_pallas(
         xp, wp, taps, kernel_size=kernel_size, stride=stride,
         interpret=interpret,
@@ -114,6 +125,27 @@ def cavity_tconv(
     flat = out.reshape(B, T_out, L * Fg)
     flat = jnp.take(flat, jnp.asarray(inv_perm), axis=-1)
     return flat[..., :num_filters]
+
+
+def cavity_tconv_step(
+    x: jnp.ndarray,          # (B, K, C) chronological window (oldest first)
+    wp: jnp.ndarray,
+    taps: jnp.ndarray,
+    inv_perm: np.ndarray,
+    num_filters: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-timestep cavity tconv over a full window.  Returns (B, F).
+
+    The streaming engine's per-frame path: no padding (the window already
+    holds K frames — ring-buffer zeros stand in for the clip's 'same'
+    padding) and no stride (emission gating lives in the engine).  Same
+    packed weights / tap sets / filter permutation as :func:`cavity_tconv`."""
+    out = cavity_tconv_step_pallas(x, wp, taps, interpret=interpret)
+    B, L, Fg = out.shape
+    flat = out.reshape(B, L * Fg)
+    flat = jnp.take(flat, jnp.asarray(inv_perm), axis=-1)
+    return flat[:, :num_filters]
 
 
 # ---------------------------------------------------------------------------

@@ -96,6 +96,32 @@ def make_gcn_infer_step(cfg: ModelConfig) -> Callable:
     return infer_step
 
 
+def make_gcn_stream_step(cfg: ModelConfig) -> Callable:
+    """Per-frame continual-inference step over prebuilt ExecutionPlans.
+
+    Returns ``step(plans, states, frame, valid=True) -> (states, logits)``
+    where ``plans``/``states`` are matched tuples of one (joint) or two
+    (joint, bone) engine ExecutionPlans and StreamStates, and ``frame`` is
+    one raw (N, V, C) skeleton frame.  The bone transform is frame-local
+    (joint − parent joint), so the two-stream ensemble streams too.  Like
+    the clip step, everything rides as pytree arguments: one compilation
+    per plan pair serves the whole stream, and ``valid=False`` drains the
+    per-block latency after the clip ends (engine.stream_flush_frames)."""
+    from repro.core.agcn import engine
+    from repro.core.agcn.model import bone_stream
+
+    def stream_step(plans, states, frame, valid=True):
+        s0, logits = engine.step_frame(plans[0], states[0], frame,
+                                       valid=valid)
+        if len(plans) > 1:
+            s1, lb = engine.step_frame(plans[1], states[1],
+                                       bone_stream(frame), valid=valid)
+            return (s0, s1), 0.5 * (logits + lb)
+        return (s0,), logits
+
+    return stream_step
+
+
 def make_serve_step(cfg: ModelConfig) -> Callable:
     def serve_step(params, cache, batch):
         logits, new_cache = registry.serve_fn(params, batch, cache, cfg)

@@ -1,10 +1,33 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the exact pytest line CI and the PR driver run.
 # CPU-only container: pin the platform so jax never probes for TPU.
+#
+# Tiers:
+#   ./test.sh           full tier — whole suite (slow cells included) plus a
+#                       benchmarks.run smoke so BENCH json emission can't rot
+#   ./test.sh --fast    fast tier — deselects @pytest.mark.slow (the heavy
+#                       pallas-interpret cells; markers in pyproject.toml)
+# Extra args pass through to pytest (e.g. ./test.sh --fast -k streaming).
 set -euo pipefail
 cd "$(dirname "$0")"
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export JAX_PLATFORMS=cpu
 
-python -m pytest -x -q "$@"
+FAST=0
+ARGS=()
+for a in "$@"; do
+  if [ "$a" = "--fast" ]; then FAST=1; else ARGS+=("$a"); fi
+done
+
+if [ "$FAST" = 1 ]; then
+  python -m pytest -x -q -m "not slow" ${ARGS[@]+"${ARGS[@]}"}
+else
+  python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+  # BENCH json emission smoke: one timed iteration, must produce the artifact
+  # (remove any stale copy first — a leftover file must not mask a rotted
+  # emission path)
+  rm -f BENCH_kernels_bench.json
+  python -m benchmarks.run --only kernels --smoke > /dev/null
+  test -s BENCH_kernels_bench.json
+fi

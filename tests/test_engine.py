@@ -39,18 +39,33 @@ def _assert_logits_close(a, b, atol=1e-3):
 
 
 # ------------------------------------------------------------------ parity
+#
+# Full backend parity matrix: {dense, pruned, pruned+quant} × {rfc on/off}.
+# The two cells the engine serves by default (dense+rfc, pruned+quant+rfc —
+# pallas plans default use_rfc=True) stay in the fast tier; the remaining
+# pallas-interpret cells are `slow` (deselected by ./test.sh --fast).
 
-def test_backend_parity_dense(params, x):
-    ref = M.forward(params, x, CFG, backend="reference")
-    pal = M.forward(params, x, CFG, backend="pallas")
-    _assert_logits_close(ref, pal)
+_FAST_CELLS = {("dense", True), ("pruned_quant", True)}
+MATRIX = [
+    pytest.param(variant, rfc,
+                 id=f"{variant}-{'rfc' if rfc else 'norfc'}",
+                 marks=() if (variant, rfc) in _FAST_CELLS
+                 else pytest.mark.slow)
+    for variant in ("dense", "pruned", "pruned_quant")
+    for rfc in (True, False)
+]
 
 
-def test_backend_parity_pruned_quantized(params, x, prune_plan):
-    ref = M.forward(params, x, CFG, plan=prune_plan, quant=True,
-                    backend="reference")
-    pal = M.forward(params, x, CFG, plan=prune_plan, quant=True,
-                    backend="pallas")
+@pytest.mark.parametrize("variant,rfc", MATRIX)
+def test_backend_parity_matrix(params, x, prune_plan, variant, rfc):
+    plan = None if variant == "dense" else prune_plan
+    quant = variant == "pruned_quant"
+    ref = engine.execute(
+        engine.build_execution_plan(params, CFG, plan, quant=quant,
+                                    backend="reference"), x)
+    pal = engine.execute(
+        engine.build_execution_plan(params, CFG, plan, quant=quant,
+                                    backend="pallas", use_rfc=rfc), x)
     _assert_logits_close(ref, pal)
 
 
@@ -64,6 +79,18 @@ def test_rfc_roundtrip_is_exact_interlayer_format(params, x, prune_plan):
     assert with_rfc.static.use_rfc and not without.static.use_rfc
     _assert_logits_close(engine.execute(with_rfc, x),
                          engine.execute(without, x), atol=1e-5)
+
+
+def test_forward_dispatches_backend_plan_quant_kwargs(params, x, prune_plan):
+    """model.forward's (backend=, plan=, quant=) plumbing compiles the same
+    plan the engine would — the PR-1 dispatcher API stays covered now that
+    the parity matrix drives engine.execute directly."""
+    via_forward = M.forward(params, x, CFG, plan=prune_plan, quant=True,
+                            backend="pallas")
+    direct = engine.execute(
+        engine.build_execution_plan(params, CFG, prune_plan, quant=True,
+                                    backend="pallas"), x)
+    _assert_logits_close(via_forward, direct, atol=0)
 
 
 def test_forward_accepts_prebuilt_plan(params, x):

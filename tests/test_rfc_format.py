@@ -9,16 +9,33 @@ from repro.core.rfc.format import (
 )
 
 
+def _random_activations(rng, rows, banks, bank, sparsity):
+    x = rng.standard_normal((rows, banks * bank)).astype(np.float32)
+    x[rng.random(x.shape) < sparsity] = -1.0      # ReLU will zero these
+    return x
+
+
 @st.composite
 def activations(draw):
     rows = draw(st.integers(1, 16))
     banks = draw(st.integers(1, 8))
     sparsity = draw(st.floats(0.0, 1.0))
     seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
-    x = rng.standard_normal((rows, banks * 16)).astype(np.float32)
-    x[rng.random(x.shape) < sparsity] = -1.0      # ReLU will zero these
-    return x
+    return _random_activations(np.random.default_rng(seed), rows, banks, 16,
+                               sparsity)
+
+
+@st.composite
+def banked_activations(draw):
+    """(bank, x) over random bank widths — the codec is generic in C3's
+    bank parameter even though the paper's accelerator fixes it at 16."""
+    bank = draw(st.sampled_from([4, 8, 16, 32]))
+    rows = draw(st.integers(1, 12))
+    banks = draw(st.integers(1, 6))
+    sparsity = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return bank, _random_activations(np.random.default_rng(seed), rows,
+                                     banks, bank, sparsity)
 
 
 @given(activations())
@@ -40,6 +57,50 @@ def test_compaction_front_packed(x):
         idx = np.flatnonzero(~row)
         if idx.size:
             assert not row[idx[0]:].any()
+
+
+@given(banked_activations())
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_is_relu_any_bank(args):
+    """rfc_decode(rfc_encode(x)) == relu(x) for every bank width."""
+    bank, x = args
+    v, hot = rfc_encode(jnp.asarray(x), bank=bank)
+    out = rfc_decode(v, hot, bank=bank)
+    np.testing.assert_allclose(np.asarray(out), np.maximum(x, 0), atol=0)
+
+
+@given(banked_activations())
+@settings(max_examples=50, deadline=None)
+def test_hot_popcount_equals_nnz(args):
+    """The hot code's popcount is exactly the bank's non-zero count — the
+    property the mbhot/minibank storage accounting stands on."""
+    bank, x = args
+    v, hot = rfc_encode(jnp.asarray(x), bank=bank)
+    hot = np.asarray(hot)
+    relu = np.maximum(x, 0).reshape(-1, x.shape[-1] // bank, bank)
+    np.testing.assert_array_equal(hot.sum(-1), (relu != 0).sum(-1))
+    # ... and the compacted values hold exactly that many non-zeros
+    np.testing.assert_array_equal(
+        hot.sum(-1),
+        (np.asarray(v).reshape(relu.shape) != 0).sum(-1))
+
+
+def test_popcount_and_roundtrip_deterministic_grid():
+    """Always-on (no-hypothesis) cover for the two properties above: a
+    seeded grid over shapes × banks × sparsities."""
+    rng = np.random.default_rng(3)
+    for bank in (4, 8, 16, 32):
+        for rows, banks in ((1, 1), (5, 3), (16, 4)):
+            for sparsity in (0.0, 0.5, 0.9, 1.0):
+                x = _random_activations(rng, rows, banks, bank, sparsity)
+                v, hot = rfc_encode(jnp.asarray(x), bank=bank)
+                out = rfc_decode(v, hot, bank=bank)
+                np.testing.assert_allclose(np.asarray(out), np.maximum(x, 0),
+                                           atol=0)
+                hot_np = np.asarray(hot)
+                relu = np.maximum(x, 0).reshape(rows, banks, bank)
+                np.testing.assert_array_equal(hot_np.sum(-1),
+                                              (relu != 0).sum(-1))
 
 
 @given(activations())

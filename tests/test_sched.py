@@ -22,6 +22,31 @@ def test_pmf_normalised(w, s):
     assert valid_work_pmf(w, s).sum() == pytest.approx(1.0, abs=1e-9)
 
 
+def test_expectation_matches_monte_carlo():
+    """expected_valid against a sampled Binomial(w, 1-s) simulation of the
+    Dyn-Mult-PE waiting queues: the analytic mean must sit within 2% of the
+    Monte-Carlo mean over a (w, sparsity) grid — the direct check that the
+    closed form models the process it claims to (paper eq. 6)."""
+    rng = np.random.default_rng(42)
+    n = 200_000
+    for w in (2, 4, 6, 12):
+        for s in (0.1, 0.35, 0.5, 0.65, 0.8):
+            sampled = rng.binomial(w, 1.0 - s, size=n).mean()
+            assert expected_valid(w, s) == pytest.approx(sampled, rel=0.02)
+
+
+def test_delay_probability_matches_monte_carlo():
+    """delay_probability(w, s, d) == P(valid work > d multipliers), sampled:
+    the Table II 'max delay' proxy is a real tail probability."""
+    rng = np.random.default_rng(7)
+    n = 200_000
+    for w, s in ((6, 0.5), (6, 0.35), (4, 0.65)):
+        draws = rng.binomial(w, 1.0 - s, size=n)
+        for d in (1, 3, w):
+            assert delay_probability(w, s, d) == pytest.approx(
+                float((draws > d).mean()), abs=5e-3)
+
+
 def test_dsp_allocation_bounds():
     for w in (4, 6):
         for s in (0.2, 0.5, 0.8):

@@ -1,0 +1,214 @@
+"""Streaming↔clip parity — the continual-inference correctness contract.
+
+A clip fed frame-by-frame through ``engine.step_frame`` (plus the
+``stream_flush_frames`` drain that materialises each block's 'same'-padding
+latency) must produce the same logits as the batched clip engine, for both
+backends.  Also locks the stride-decimated emission count, the jit-cache
+friendliness of the step (state/plan as pytree args), the sliding-window
+pool, and the calibration/ C_k preconditions.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.agcn import engine
+from repro.core.agcn import model as M
+from repro.core.pruning.plan import build_prune_plan
+from repro.train.steps import make_gcn_infer_step, make_gcn_stream_step
+
+CFG = get_config("agcn-2s", reduced=True)
+N = 2
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (N, CFG.gcn_frames, 25, 3))
+
+
+@pytest.fixture(scope="module")
+def prune_plan(params):
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    return build_prune_plan(sw, CFG.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                            "cav-70-1", input_skip=2)
+
+
+def _stream(plan, x, state=None):
+    """Feed a clip frame-by-frame + the flush drain; return (state, logits)."""
+    if state is None:
+        state = engine.init_stream_state(plan, x.shape[0], x_calib=x)
+    step = jax.jit(engine.step_frame)
+    T = x.shape[1]
+    zeros = jnp.zeros_like(x[:, 0])
+    logits = None
+    for r in range(T + engine.stream_flush_frames(plan, T)):
+        frame = x[:, r] if r < T else zeros
+        state, logits = step(plan, state, frame, jnp.asarray(r < T))
+    return state, logits
+
+
+# ------------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_streaming_matches_clip_pruned_quant(params, x, prune_plan, backend):
+    """The tentpole lock: post-warmup (fully drained) streaming logits equal
+    the batched engine's on the paper's pruned+quantized target."""
+    plan = engine.build_execution_plan(params, CFG, prune_plan, quant=True,
+                                       backend=backend)
+    want = engine.execute(plan, x)
+    _, got = _stream(plan, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_streaming_matches_clip_dense(params, x, backend):
+    plan = engine.build_execution_plan(params, CFG, backend=backend)
+    want = engine.execute(plan, x)
+    _, got = _stream(plan, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_two_stream_step_matches_clip_ensemble(params, x):
+    """make_gcn_stream_step (joint+bone ensemble) drains to the clip-mode
+    two-stream step's logits — the serve --stream path."""
+    pb = M.init_params(CFG, jax.random.PRNGKey(7))
+    plans = tuple(engine.build_execution_plan(p, CFG, backend="reference")
+                  for p in (params, pb))
+    states = (engine.init_stream_state(plans[0], N, x_calib=x),
+              engine.init_stream_state(plans[1], N,
+                                       x_calib=M.bone_stream(x)))
+    step = jax.jit(make_gcn_stream_step(CFG))
+    T = x.shape[1]
+    zeros = jnp.zeros_like(x[:, 0])
+    logits = None
+    for r in range(T + engine.stream_flush_frames(plans[0], T)):
+        frame = x[:, r] if r < T else zeros
+        states, logits = step(plans, states, frame, jnp.asarray(r < T))
+    want = jax.jit(make_gcn_infer_step(CFG))(plans, x)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_streaming_matches_clip_odd_stride_length(params, prune_plan):
+    """Odd frame count into the stride-2 block (the full 300-frame config's
+    shape: 300 → skip 2 → 150 → stride 2 → 75 odd): the pallas clip kernel
+    must produce conv-semantics ceil(T/stride) outputs — and streaming must
+    still drain to clip parity — not silently drop the trailing output."""
+    x_odd = jax.random.normal(jax.random.PRNGKey(3), (N, 30, 25, 3))
+    ref = engine.execute(
+        engine.build_execution_plan(params, CFG, prune_plan, quant=True,
+                                    backend="reference"), x_odd)
+    plan = engine.build_execution_plan(params, CFG, prune_plan, quant=True,
+                                       backend="pallas")
+    np.testing.assert_allclose(np.asarray(engine.execute(plan, x_odd)),
+                               np.asarray(ref), atol=1e-3, rtol=1e-3)
+    _, got = _stream(plan, x_odd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+# -------------------------------------------------------- state machinery
+
+def test_emission_count_matches_clip_output_length(params, x):
+    """Stride decimation + input skip: exactly the clip engine's pooled
+    frame count reaches the logit pool — no more (flush garbage is gated by
+    the validity ring), no fewer."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    state, _ = _stream(plan, x)
+    t = -(-x.shape[1] // CFG.input_skip)
+    for s in CFG.gcn_strides:
+        t = (t - 1) // s + 1
+    assert int(state.pool_t) == t
+
+
+def test_stream_state_rides_jit_cache(params, x):
+    """step_frame never retraces for a rebuilt plan or a fresh state — the
+    streaming analogue of the clip engine's no-retrace invariant."""
+    traces = []
+
+    @jax.jit
+    def counted(plan, state, frame, valid):
+        traces.append(1)
+        return engine.step_frame(plan, state, frame, valid)
+
+    p1 = engine.build_execution_plan(params, CFG, backend="reference")
+    p2 = engine.build_execution_plan(params, CFG, backend="reference")
+    s1 = engine.init_stream_state(p1, N, x_calib=x)
+    s2 = engine.init_stream_state(p2, N, x_calib=x)
+    s1, a = counted(p1, s1, x[:, 0], jnp.asarray(True))
+    s2, b = counted(p2, s2, x[:, 0], jnp.asarray(True))
+    _, _ = counted(p1, s1, x[:, 1], jnp.asarray(False))
+    assert len(traces) == 1
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sliding_window_pool(params, x):
+    """gcn_stream_pool=W: a window at least as long as the emission count is
+    cumulative (clip parity); a shorter window changes the logits but keeps
+    them finite (the live-stream mode)."""
+    cfg_big = dataclasses.replace(CFG, gcn_stream_pool=16)
+    cfg_small = dataclasses.replace(CFG, gcn_stream_pool=3)
+    want = engine.execute(
+        engine.build_execution_plan(params, CFG, backend="reference"), x)
+    plan_big = engine.build_execution_plan(params, cfg_big,
+                                           backend="reference")
+    _, big = _stream(plan_big, x)
+    np.testing.assert_allclose(np.asarray(big), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+    plan_small = engine.build_execution_plan(params, cfg_small,
+                                             backend="reference")
+    state, small = _stream(plan_small, x)
+    assert np.isfinite(np.asarray(small)).all()
+    assert state.pool_ring.shape == (N, 3, CFG.gcn_channels[-1])
+    assert not np.allclose(np.asarray(small), np.asarray(want), atol=1e-3)
+
+
+def test_rfc_state_holds_encoded_interlayer_activations(params, x,
+                                                        prune_plan):
+    """Pallas streams carry the running RFC-encoded activations between
+    blocks: hot is a 0/1 mask, values are front-packed non-negative
+    (post-ReLU), and popcount matches the nonzero count."""
+    plan = engine.build_execution_plan(params, CFG, prune_plan,
+                                       backend="pallas")
+    assert plan.static.use_rfc
+    state, _ = _stream(plan, x)
+    assert len(state.rfc) == len(plan.static.blocks) - 1
+    for boundary in state.rfc:
+        hot = np.asarray(boundary["vals"] != 0)
+        assert int(hot.sum()) == int(np.asarray(boundary["hot"]).sum())
+
+
+# -------------------------------------------------------- preconditions
+
+def test_calibration_required(params):
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    with pytest.raises(ValueError, match="frozen BN statistics"):
+        engine.init_stream_state(plan, N)
+
+
+def test_use_ck_rejected(x):
+    cfg = dataclasses.replace(CFG, use_ck=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    plan = engine.build_execution_plan(params, cfg, backend="reference")
+    with pytest.raises(NotImplementedError, match="use_ck"):
+        engine.init_stream_state(plan, N, x_calib=x)
+
+
+def test_flush_frames_formula(params):
+    """stream_flush_frames covers every block's pad·stride-product latency
+    in raw-frame time (exact backward recurrence, not an upper bound)."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    # reduced cfg: skip 2, strides (1,1,2,1), K=9 -> drain worked by hand
+    assert engine.stream_flush_frames(plan, CFG.gcn_frames) == 37
+    assert engine.stream_flush_frames(plan, 0) >= 0
