@@ -117,6 +117,26 @@ def main():
         emit(f"throughput/measured/stream/{backend}", ts,
              f"frames_per_s={x.shape[0] * 1e6 / ts:.1f} "
              f"clip_equiv_us={ts * frames:.0f} (interpret CPU)")
+        # sessions axis: the multi-session slab tick (staggered slots,
+        # admission resets traced in) at the serving slot counts — the
+        # marginal cost of slot capacity, and of the reset/validity masking
+        # vs the lockstep stream row above
+        stepS = jax.jit(engine.step_frames)
+        for S in (4, 16):
+            slab = engine.init_session_slab(ep, S, x_calib=x)
+            frames_in = jnp.zeros((S, cfg.gcn_joints, cfg.gcn_in_channels))
+            valid = np.arange(S) % 2 == 0                # half occupancy
+            reset = jnp.asarray(np.arange(S) == 0)       # one admission
+            tS = time_fn(stepS, ep, slab, frames_in, jnp.asarray(valid),
+                         reset, iters=3)
+            # only occupied slots serve real frames — frames/s counts those
+            # (same definition as launch.sessions.run_sessions), while the
+            # tick itself always pays for all S slots
+            n_act = int(valid.sum())
+            emit(f"throughput/measured/sessions/{backend}/S{S}", tS,
+                 f"frames_per_s={n_act * 1e6 / tS:.1f} "
+                 f"active={n_act}/{S} per_active_slot_us={tS / n_act:.0f} "
+                 f"(interpret CPU)")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Paper-mechanism core: the 2s-AGCN model + backend-dispatched execution
+engine (``agcn``), the hybrid pruning plans C1/C2 (``pruning``), the RFC
+sparse-feature format C3 (``rfc``), Q8.8/int8 quantization C5 (``quant``)
+and the Dyn-Mult-PE expectation model (``sched``).  Substrate-specific
+kernels live in ``repro.kernels``; serving/scheduling in ``repro.launch``."""

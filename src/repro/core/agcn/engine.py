@@ -71,6 +71,11 @@ class BlockStatic:
 
 @dataclasses.dataclass(frozen=True)
 class PlanStatic:
+    """Hashable whole-plan metadata — the jit-cache key of a compiled
+    ExecutionPlan (backend/interpret selection, C5 input skip, RFC
+    inter-layer format flags, streaming shape constants, and the per-block
+    ``BlockStatic`` tuple)."""
+
     backend: str
     interpret: bool
     input_skip: int
@@ -98,10 +103,12 @@ class ExecutionPlan:
     static: PlanStatic
 
     def tree_flatten(self):
+        """Pytree split: arrays are jit leaves, PlanStatic is hashable aux."""
         return (self.arrays,), self.static
 
     @classmethod
     def tree_unflatten(cls, static, children):
+        """Rebuild from (aux, leaves) — the jax pytree protocol inverse."""
         return cls(arrays=children[0], static=static)
 
 
@@ -186,15 +193,23 @@ class Backend(Protocol):
     name: str
 
     def spatial(self, x: jnp.ndarray, ba: Dict[str, Any],
-                bs: BlockStatic) -> jnp.ndarray: ...
+                bs: BlockStatic) -> jnp.ndarray:
+        """Graph spatial conv Σ_k (G_k·x)·W_k: (N,T,V,Cin) -> (N,T,V,Cout)."""
+        ...
 
     def temporal(self, x: jnp.ndarray, ba: Dict[str, Any],
-                 bs: BlockStatic) -> jnp.ndarray: ...
+                 bs: BlockStatic) -> jnp.ndarray:
+        """Clip-mode temporal conv over T: (N,T,V,C) -> (N,T_out,V,Cout)."""
+        ...
 
     def temporal_step(self, win: jnp.ndarray, ba: Dict[str, Any],
-                      bs: BlockStatic) -> jnp.ndarray: ...
+                      bs: BlockStatic) -> jnp.ndarray:
+        """One output frame from a K-frame window: (N,K,V,C) -> (N,V,Cout)."""
+        ...
 
-    def transfer(self, h: jnp.ndarray, ps: PlanStatic) -> jnp.ndarray: ...
+    def transfer(self, h: jnp.ndarray, ps: PlanStatic) -> jnp.ndarray:
+        """Inter-block activation transfer (identity / RFC roundtrip)."""
+        ...
 
 
 def _gather_in(x: jnp.ndarray, ba: Dict[str, Any]) -> jnp.ndarray:
@@ -222,9 +237,12 @@ class ReferenceBackend:
     name = "reference"
 
     def spatial(self, x, ba, bs):
+        """Kept-channel gather + the Σ_k (G_k·x)·W_k einsum (optional C_k)."""
         return _spatial_einsum(_gather_in(x, ba), ba, bs)
 
     def temporal(self, x, ba, bs):
+        """Dense masked temporal conv, 'same' padding, stride on T; pruned
+        filters are scattered back to full width for the residual path."""
         w = ba["tw"].astype(x.dtype)                  # (F_kept, C, K) masked
         K = w.shape[-1]
         pad = K // 2
@@ -251,6 +269,7 @@ class ReferenceBackend:
         return out
 
     def transfer(self, h, ps):
+        """Identity — reference activations cross blocks uncompressed."""
         return h
 
 
@@ -268,6 +287,8 @@ class PallasBackend:
         self.interpret = interpret
 
     def spatial(self, x, ba, bs):
+        """Fused graph+1×1 kernel (``ops.graph_sconv``) on the padded
+        (K, Vp, Vp) plan graph; C_k blocks fall back to the einsum."""
         xg = _gather_in(x, ba)
         if bs.use_ck:
             return _spatial_einsum(xg, ba, bs)
@@ -275,6 +296,8 @@ class PallasBackend:
                                interpret=self.interpret)
 
     def temporal(self, x, ba, bs):
+        """Packed cavity tconv kernel over the flattened (N·V, T, C) rows —
+        only the kept taps are issued (the paper's C2 FLOP skip)."""
         N, T, V, C = x.shape
         xb = jnp.transpose(x, (0, 2, 1, 3)).reshape(N * V, T, C)
         out = ops.cavity_tconv(
@@ -305,6 +328,8 @@ class PallasBackend:
         return out
 
     def transfer(self, h, ps):
+        """RFC encode/decode roundtrip — the compressed inter-layer
+        activation format (lossless on post-ReLU values)."""
         if not ps.use_rfc:
             return h
         vals, hot = ops.rfc_encode(h, bank=ps.rfc_bank,
@@ -314,6 +339,8 @@ class PallasBackend:
 
 
 def get_backend(name: str, interpret: bool = True) -> Backend:
+    """Backend registry lookup: ``reference`` | ``pallas`` (cheap to call
+    inside traced code — backends are stateless op providers)."""
     if name == "reference":
         return ReferenceBackend()
     if name == "pallas":
@@ -548,17 +575,31 @@ def collect_bn_stats(plan: ExecutionPlan, x: jnp.ndarray
 # logits equal clip logits (tests/test_streaming.py).  RFC encode/decode is
 # applied to every emitted inter-block frame (pallas), and the running
 # encoded activations live in the state.
+#
+# All per-stream clocks are tracked **per slot** (leading axis of every
+# state leaf): slot s has its own raw-frame counter, per-block input
+# counters, validity rings and logit pool.  A StreamState is therefore
+# simultaneously one lockstep batch (every slot fed the same clip — the
+# PR-2 streaming mode) and a **session slab**: independent live sessions
+# occupying slots, admitted/evicted at different times by a host-side
+# scheduler (repro.launch.sessions) through :func:`reset_slots` and
+# :func:`step_frames`.  Free/dead slots are masked with ``valid=False``
+# frames through the existing clip-validity machinery, so one compiled
+# step serves any slot occupancy without retracing.
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class StreamState:
-    """Pytree state of one AGCN stream (one batch of live skeletons).
+    """Pytree state of S concurrent AGCN stream slots (the session slab).
 
-    ``blocks[b]``: ring_s (N, K, V, cout) tconv-input ring, ring_h
-    (N, K, V, cin) residual-source ring, valid (K,) clip-validity bits,
-    t () int32 inputs seen at this block's time scale.  ``pool_*`` hold the
-    running temporal logit pool; ``bn_stats`` the frozen calibration;
-    ``rfc`` the running RFC-encoded inter-block activations (pallas)."""
+    ``blocks[b]``: ring_s (S, K, V, cout) tconv-input ring, ring_h
+    (S, K, V, cin) residual-source ring, valid (S, K) clip-validity bits,
+    t (S,) int32 inputs seen at this block's time scale (per slot — slots
+    admitted at different times run at different ring phases).  ``t_raw``
+    (S,) counts raw frames per slot; ``pool_*`` hold the per-slot running
+    temporal logit pool; ``bn_stats`` the frozen calibration (shared by all
+    slots — calibrated once per plan, untouched by slot resets); ``rfc``
+    the per-slot running RFC-encoded inter-block activations (pallas)."""
 
     t_raw: Any
     blocks: List[Dict[str, Any]]
@@ -569,11 +610,14 @@ class StreamState:
     rfc: Optional[List[Dict[str, Any]]]
 
     def tree_flatten(self):
+        """Pytree split: every field is a leaf subtree (no static aux), so
+        states ride jit boundaries and rebuilt states never retrace."""
         return ((self.t_raw, self.blocks, self.pool_ring, self.pool_sum,
                  self.pool_t, self.bn_stats, self.rfc), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild from pytree children (field order of the dataclass)."""
         return cls(*children)
 
 
@@ -585,12 +629,14 @@ def init_stream_state(
     bn_stats: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None,
     dtype=jnp.float32,
 ) -> StreamState:
-    """Fresh zeroed StreamState for ``batch`` concurrent skeleton streams.
+    """Fresh zeroed StreamState for ``batch`` concurrent stream slots.
 
     Streaming needs frozen batch-norm statistics: pass ``x_calib`` (a
     representative clip batch — the stats are recorded from one clip-mode
     pass of this plan's own backend) or precomputed ``bn_stats`` from
-    :func:`collect_bn_stats`."""
+    :func:`collect_bn_stats`.  The statistics are plan-level (shared by
+    every slot), so one calibration serves sessions admitted at any later
+    time."""
     ps = plan.static
     if any(bs.use_ck for bs in ps.blocks):
         raise NotImplementedError(
@@ -610,8 +656,8 @@ def init_stream_state(
         blocks.append({
             "ring_s": jnp.zeros((batch, K, V, bs.cout), dtype),
             "ring_h": jnp.zeros((batch, K, V, bs.cin), dtype),
-            "valid": jnp.zeros((K,), bool),
-            "t": jnp.zeros((), jnp.int32),
+            "valid": jnp.zeros((batch, K), bool),
+            "t": jnp.zeros((batch,), jnp.int32),
         })
     c_last = ps.blocks[-1].cout
     rfc = None
@@ -622,9 +668,53 @@ def init_stream_state(
     pool_ring = (jnp.zeros((batch, ps.stream_pool, c_last), dtype)
                  if ps.stream_pool > 0 else None)
     return StreamState(
-        t_raw=jnp.zeros((), jnp.int32), blocks=blocks,
+        t_raw=jnp.zeros((batch,), jnp.int32), blocks=blocks,
         pool_ring=pool_ring, pool_sum=jnp.zeros((batch, c_last), dtype),
-        pool_t=jnp.zeros((), jnp.int32), bn_stats=bn_stats, rfc=rfc)
+        pool_t=jnp.zeros((batch,), jnp.int32), bn_stats=bn_stats, rfc=rfc)
+
+
+def init_session_slab(
+    plan: ExecutionPlan,
+    slots: int,
+    *,
+    x_calib: Optional[jnp.ndarray] = None,
+    bn_stats: Optional[Dict[str, Dict[str, jnp.ndarray]]] = None,
+    dtype=jnp.float32,
+) -> StreamState:
+    """A fixed-capacity session slab: ``slots`` independent stream slots.
+
+    Identical to :func:`init_stream_state` — a slab *is* a StreamState
+    whose leading axis is slot capacity S rather than a lockstep batch.
+    Named separately so serving code reads as what it means; the host-side
+    admission/eviction scheduler lives in ``repro.launch.sessions``."""
+    return init_stream_state(plan, slots, x_calib=x_calib,
+                             bn_stats=bn_stats, dtype=dtype)
+
+
+def reset_slots(state: StreamState, free) -> StreamState:
+    """Zero the per-slot streaming state of every slot where ``free`` is
+    True — the traced admission reset.
+
+    ``free`` is a (S,) bool mask.  All per-slot leaves (rings, validity
+    bits, block clocks, logit pools, RFC carries, raw-frame counters) are
+    zeroed via ``jnp.where``, so admitting a new session into a recycled
+    slot is one masked select inside the already-compiled step — never a
+    retrace, never a state rebuild.  The shared frozen BN statistics are
+    plan-level calibration and are left untouched."""
+    free = jnp.asarray(free, bool)
+
+    def z(leaf):
+        m = free.reshape(free.shape + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(leaf), leaf)
+
+    blocks = [{k: z(v) for k, v in b.items()} for b in state.blocks]
+    rfc = ([{k: z(v) for k, v in r.items()} for r in state.rfc]
+           if state.rfc is not None else None)
+    return StreamState(
+        t_raw=z(state.t_raw), blocks=blocks,
+        pool_ring=z(state.pool_ring) if state.pool_ring is not None else None,
+        pool_sum=z(state.pool_sum), pool_t=z(state.pool_t),
+        bn_stats=state.bn_stats, rfc=rfc)
 
 
 def stream_flush_frames(plan: ExecutionPlan, frames: int) -> int:
@@ -643,6 +733,20 @@ def stream_flush_frames(plan: ExecutionPlan, frames: int) -> int:
     return max(0, total - frames)
 
 
+def stream_first_logit_delay(plan: ExecutionPlan) -> int:
+    """Raw frames from slot admission until the first *valid* logit
+    contribution lands in the pool — the admission-to-first-logit latency
+    in frame ticks (the wall-clock version is measured by the session
+    scheduler).  Same backward recurrence as :func:`stream_flush_frames`
+    with final output index o = 0."""
+    ps = plan.static
+    pad = ps.tkernel // 2
+    o = 0
+    for bs in reversed(ps.blocks):
+        o = o * bs.stride + pad
+    return o * ps.input_skip + 1
+
+
 def _stem_frame(arrays, frame: jnp.ndarray, bn) -> jnp.ndarray:
     """Per-frame stem: data_bn on one (N, V, C) frame with frozen stats."""
     x = frame.astype(arrays["data_bn"]["scale"].dtype)
@@ -654,25 +758,40 @@ def _stem_frame(arrays, frame: jnp.ndarray, bn) -> jnp.ndarray:
 def step_frame(
     plan: ExecutionPlan,
     state: StreamState,
-    frame: jnp.ndarray,              # (N, V, C) one raw skeleton frame
+    frame: jnp.ndarray,              # (S, V, C) one raw frame per slot
     valid=True,                      # False -> flush step (post-clip drain)
 ) -> Tuple[StreamState, jnp.ndarray]:
-    """Advance every stream by one raw frame; returns (state, logits).
+    """Advance every stream slot by one raw frame; returns (state, logits).
+
+    ``valid`` is a scalar (lockstep batch — every slot streams the same
+    clip timeline) or a (S,) bool vector (session slab — each slot has its
+    own clip/flush phase; False slots take the zero-padding drain path).
+    Because every clock in the state is per-slot, slots admitted at
+    different times decimate, emit and pool independently.
 
     Pure and jit-stable: the plan and state ride as pytree arguments, all
     data-dependent control (input-skip gaps, stride-decimated emission,
-    clip-validity of flushed windows) is traced masking — one compilation
-    per ExecutionPlan serves the whole stream."""
+    clip-validity of flushed windows, per-slot ring phases) is traced
+    masking — one compilation per ExecutionPlan serves the whole stream at
+    any slot occupancy.  The slot axis is constrained to the logical
+    "batch" sharding axis, so a slab shards across devices under
+    ``distributed.sharding.axis_rules``."""
+    from repro.distributed.sharding import constrain
+
     ps = plan.static
     backend = get_backend(ps.backend, ps.interpret)
     bn = _BNFrozen(state.bn_stats)
     K = ps.tkernel
     pad = K // 2
     nblocks = len(ps.blocks)
+    S = frame.shape[0]
+    rows = jnp.arange(S)
 
-    process = (state.t_raw % ps.input_skip) == 0      # C5 input skipping
+    valid = jnp.broadcast_to(jnp.asarray(valid, bool), (S,))
+    process = (state.t_raw % ps.input_skip) == 0      # C5 input skipping (S,)
     has_input = process
-    in_valid = jnp.logical_and(jnp.asarray(valid), process)
+    in_valid = jnp.logical_and(valid, process)
+    frame = constrain(frame, "batch", None, None)
     h_in = _stem_frame(plan.arrays, frame, bn)
 
     new_blocks: List[Dict[str, Any]] = []
@@ -683,7 +802,7 @@ def step_frame(
     for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"], ps.blocks)):
         sb = state.blocks[b]
         tag = f"b{b}/"
-        t = sb["t"]
+        t = sb["t"]                                    # (S,) block clock
 
         # --- frame-local gcn unit (spatial graph conv + down residual) ----
         s = backend.spatial(h_in[:, None], ba, bs)[:, 0]
@@ -694,32 +813,35 @@ def step_frame(
                 if ba["down_w"] is not None else h_in)
         s = jax.nn.relu(s + down)
         # invalid inputs become the clip conv's zero padding at this level
-        s = jnp.where(in_valid, s, 0.0)
+        s = jnp.where(in_valid[:, None, None], s, 0.0)
 
-        # --- masked ring write -------------------------------------------
-        slot = t % K
-        ring_s = jnp.where(has_input, sb["ring_s"].at[:, slot].set(s),
-                           sb["ring_s"])
-        ring_h = jnp.where(has_input, sb["ring_h"].at[:, slot].set(h_in),
+        # --- masked per-slot ring write ----------------------------------
+        slot = t % K                                   # (S,) ring phase
+        ring_s = jnp.where(has_input[:, None, None, None],
+                           sb["ring_s"].at[rows, slot].set(s), sb["ring_s"])
+        ring_h = jnp.where(has_input[:, None, None, None],
+                           sb["ring_h"].at[rows, slot].set(h_in),
                            sb["ring_h"])
-        vring = jnp.where(has_input, sb["valid"].at[slot].set(in_valid),
+        vring = jnp.where(has_input[:, None],
+                          sb["valid"].at[rows, slot].set(in_valid),
                           sb["valid"])
         t_new = t + has_input.astype(jnp.int32)
         new_blocks.append({"ring_s": ring_s, "ring_h": ring_h,
                            "valid": vring, "t": t_new})
 
-        # --- stride-decimated emission -----------------------------------
+        # --- stride-decimated emission (per slot) ------------------------
         # output o of the clip conv completes when input t = o*stride + pad
         # arrives; its center tap (and residual source) is input t - pad
         emit = jnp.logical_and(
             has_input,
             jnp.logical_and(t >= pad, (t - pad) % bs.stride == 0))
-        idx = (t + 1 + jnp.arange(K)) % K              # chronological window
-        win = jnp.take(ring_s, idx, axis=1)
+        idx = (t[:, None] + 1 + jnp.arange(K)[None, :]) % K   # (S, K) chrono
+        win = jnp.take_along_axis(ring_s, idx[:, :, None, None], axis=1)
         out = backend.temporal_step(win, ba, bs)
         out = bn(tag + "bn_t", out, ba["bn_t"])
-        center = (t - pad) % K
-        h_c = jnp.take(ring_h, center, axis=1)
+        center = (t - pad) % K                         # (S,)
+        h_c = jnp.take_along_axis(
+            ring_h, center[:, None, None, None], axis=1)[:, 0]
         if ba["short_w"] is not None:
             res = bn(tag + "bn_short",
                      jnp.einsum("nvc,co->nvo", h_c, ba["short_w"]),
@@ -727,7 +849,7 @@ def step_frame(
         else:
             res = h_c
         out = jax.nn.relu(out + res)
-        out_valid = jnp.take(vring, center)
+        out_valid = jnp.take_along_axis(vring, center[:, None], axis=1)[:, 0]
 
         # --- inter-block transfer: the RFC format, frame-wise -------------
         if b < nblocks - 1:
@@ -735,23 +857,25 @@ def step_frame(
                 vals, hot = ops.rfc_encode(out, bank=ps.rfc_bank,
                                            interpret=ps.interpret)
                 old = state.rfc[b]
+                keep = emit[:, None, None]
                 new_rfc.append(
-                    {"vals": jnp.where(emit, vals, old["vals"]),
-                     "hot": jnp.where(emit, hot, old["hot"])})
+                    {"vals": jnp.where(keep, vals, old["vals"]),
+                     "hot": jnp.where(keep, hot, old["hot"])})
                 out = ops.rfc_decode(vals, hot, bank=ps.rfc_bank,
                                      interpret=ps.interpret)
             h_in = out
         has_input = emit
         in_valid = out_valid
 
-    # --- running temporal logit pool -------------------------------------
-    take = jnp.logical_and(emit, out_valid)
-    contrib = out.mean(axis=1)                         # (N, C_last): V pooled
+    # --- running temporal logit pool (per slot) ---------------------------
+    take = jnp.logical_and(emit, out_valid)            # (S,)
+    contrib = out.mean(axis=1)                         # (S, C_last): V pooled
     if ps.stream_pool > 0:
         W = ps.stream_pool
-        pslot = state.pool_t % W
+        pslot = state.pool_t % W                       # (S,)
         pool_ring = jnp.where(
-            take, state.pool_ring.at[:, pslot].set(contrib), state.pool_ring)
+            take[:, None, None],
+            state.pool_ring.at[rows, pslot].set(contrib), state.pool_ring)
         # recompute from the ring (W is small): a running add/subtract
         # would accumulate rounding drift over an unbounded live stream
         pool_sum = pool_ring.sum(axis=1)
@@ -759,14 +883,39 @@ def step_frame(
         n_eff = jnp.minimum(pool_t, W)
     else:
         pool_ring = None
-        pool_sum = state.pool_sum + jnp.where(take, contrib, 0.0)
+        pool_sum = state.pool_sum + jnp.where(take[:, None], contrib, 0.0)
         pool_t = state.pool_t + take.astype(jnp.int32)
         n_eff = pool_t
-    pooled = pool_sum / jnp.maximum(n_eff, 1).astype(pool_sum.dtype)
+    pooled = pool_sum / jnp.maximum(n_eff, 1)[:, None].astype(pool_sum.dtype)
     logits = pooled @ plan.arrays["fc_w"] + plan.arrays["fc_b"]
+    logits = constrain(logits, "batch", None)
 
     new_state = StreamState(
         t_raw=state.t_raw + 1, blocks=new_blocks, pool_ring=pool_ring,
         pool_sum=pool_sum, pool_t=pool_t, bn_stats=state.bn_stats,
         rfc=new_rfc if ps.use_rfc else None)
     return new_state, logits
+
+
+def step_frames(
+    plan: ExecutionPlan,
+    slab: StreamState,
+    frames: jnp.ndarray,             # (S, V, C) one raw frame per slot
+    valid,                           # (S,) bool — per-slot clip/flush phase
+    reset=None,                      # optional (S,) bool — admission reset
+) -> Tuple[StreamState, jnp.ndarray]:
+    """One scheduler tick of the session slab; returns (slab, logits[S]).
+
+    The multi-session serving step: ``reset`` zeroes the marked slots
+    *before* the frame is consumed (so an admission's first frame lands in
+    a clean ring), then every slot advances one raw frame with its own
+    ``valid`` bit — active sessions feed real frames (True), draining
+    sessions feed the zero-padding flush (False), and free slots are dead
+    weight masked by the same validity machinery.  Everything is traced
+    masking over the compiled :func:`step_frame`, so the jitted tick is
+    compiled once per ExecutionPlan regardless of admissions, evictions or
+    occupancy.  Logits row s is slot s's running prediction; the host-side
+    scheduler (``repro.launch.sessions``) reads it at eviction time."""
+    if reset is not None:
+        slab = reset_slots(slab, reset)
+    return step_frame(plan, slab, frames, valid)

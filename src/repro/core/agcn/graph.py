@@ -65,6 +65,7 @@ def build_ntu_subsets(num_subsets: int = 3) -> np.ndarray:
 
 
 def static_graph(num_subsets: int = 3) -> jnp.ndarray:
+    """The normalized NTU subset graphs A as a device array (K, V, V)."""
     return jnp.asarray(build_ntu_subsets(num_subsets))
 
 

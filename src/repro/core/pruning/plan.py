@@ -36,6 +36,7 @@ class BlockPrunePlan:
 
     @property
     def in_keep_frac(self) -> float:
+        """Kept fraction of this block's spatial input channels (C1)."""
         return len(self.kept_in) / max(1, self._cin)
 
     _cin: int = 0
@@ -44,6 +45,11 @@ class BlockPrunePlan:
 
 @dataclasses.dataclass(frozen=True)
 class PrunePlan:
+    """The whole-model hybrid pruning plan: per-block C1/C2 decisions
+    (``blocks``), the fine cavity pattern name (C2), and the C5 input-frame
+    skip — everything ``engine.build_execution_plan`` compacts into an
+    ExecutionPlan's gathers and packed weights."""
+
     blocks: Tuple[BlockPrunePlan, ...]
     cavity_name: str
     input_skip: int = 1
@@ -151,6 +157,8 @@ def unstructured_prune(w: np.ndarray, frac: float) -> np.ndarray:
 
 
 def cavity_report(name: str, tkernel: int = 9) -> Dict:
+    """Balance statistics of a named cavity pattern (paper Fig. 10): kept
+    fraction plus per-loop tap min/max — the tile-balance check."""
     return balance_stats(cavity_pattern(name, kernel=tkernel))
 
 

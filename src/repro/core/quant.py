@@ -27,6 +27,7 @@ def quantize_int8(w: jnp.ndarray, axis: int = -1) -> Tuple[jnp.ndarray, jnp.ndar
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8`: q·scale back in the scale dtype."""
     return q.astype(scale.dtype) * scale
 
 

@@ -48,6 +48,8 @@ def delay_probability(w: int, sparsity: float, dsps: int) -> float:
 
 
 def scheduling_report(w: int, sparsity: float, guard: float = 0.15) -> Dict[str, float]:
+    """Full Table-II row for one (queue width, sparsity) point: E(D), the
+    provisioned multiplier count, its saving/efficiency, and delay prob."""
     d = dsp_allocation(w, sparsity, guard)
     return {
         "kept_weights": w,

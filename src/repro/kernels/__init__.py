@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot-spots — fused graph+1×1
+spatial conv (``graph_sconv``), cavity-pruned temporal conv clip/step
+(``cavity_tconv``), RFC encode/decode (``rfc_pack``), flash decode
+attention (``flash_decode``) — plus the layout-adapting public wrappers
+(``ops``) and the pure-jnp oracles (``ref``) the parity tests sweep."""

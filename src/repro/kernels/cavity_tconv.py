@@ -104,6 +104,13 @@ def cavity_tconv_pallas(
     stride: int = 1,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Clip-mode packed cavity tconv: (B, T_pad, C) -> (B, T_out, L, Fg).
+
+    ``wp``/``taps`` are the ops.pack_cavity_weights layout — group g holds
+    filters g, g+L, g+2L… sharing one kept-tap set; each grid step issues
+    only those ``n_keep`` shifted (C×Fg) matmuls (the C2 FLOP skip).  The
+    caller (ops.cavity_tconv) provides 'same'+stride zero padding on T and
+    un-permutes the flattened (L, Fg) filter axis."""
     B, T_pad, C = x.shape
     L, n_keep, _, Fg = wp.shape
     T_out = (T_pad - kernel_size + 1) // stride

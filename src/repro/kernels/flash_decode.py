@@ -76,6 +76,10 @@ def flash_decode_pallas(
     valid: jnp.ndarray,    # scalar int32
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Fused GQA decode attention with online softmax: one query token per
+    (batch, kv-head, group) against a ``valid``-masked KV cache — q
+    (B, Hkv, G, D), k/v (B, S, Hkv, D) -> (B, Hkv, G, D), with exactly one
+    HBM read of the cache (running max/sum/acc live in VMEM scratch)."""
     B, Hkv, G, D = q.shape
     S = k.shape[1]
     s_block = min(S_BLOCK, S)

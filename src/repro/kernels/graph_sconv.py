@@ -55,6 +55,11 @@ def graph_sconv_pallas(
     w: jnp.ndarray,      # (K, Cin, Cout)
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Fused Σ_k (G_k·x)·W_k in one VMEM pass: (R, Vp, Cin) -> (R, Vp, Cout).
+
+    The graph matmul and the 1×1 conv share each x tile, so the (G·x)
+    intermediate never leaves VMEM; callers pad R/V (ops.graph_sconv) so
+    the (R tiles, Cout tiles) grid divides exactly."""
     R, Vp, Cin = x.shape
     K, _, Cout = w.shape
     if R % R_TILE == 0:

@@ -48,6 +48,9 @@ def rfc_encode(x: jnp.ndarray, bank: int = 16, interpret: bool = True):
 
 def rfc_decode(values: jnp.ndarray, hot: jnp.ndarray, bank: int = 16,
                interpret: bool = True) -> jnp.ndarray:
+    """Inverse of :func:`rfc_encode`: scatter each bank's front-packed
+    values back to their hot positions.  Any (..., C) shape; lossless on
+    post-ReLU activations (the roundtrip contract in test_rfc_format)."""
     shape = values.shape
     v = _pad_to(_pad_to(values.reshape(-1, shape[-1]), 1, bank), 0, 8)
     h = _pad_to(_pad_to(hot.reshape(-1, shape[-1]), 1, bank), 0, 8)

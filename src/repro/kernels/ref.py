@@ -22,6 +22,8 @@ def rfc_encode_ref(x: jnp.ndarray, bank: int = 16):
 
 
 def rfc_decode_ref(values: jnp.ndarray, hot: jnp.ndarray, bank: int = 16):
+    """Scatter front-packed bank values back to their hot positions —
+    the decode oracle; (rows, C) in, (rows, C) out."""
     rows, cols = values.shape
     v = values.reshape(rows, cols // bank, bank)
     h = hot.reshape(rows, cols // bank, bank) > 0

@@ -86,6 +86,9 @@ def rfc_encode_pallas(x: jnp.ndarray, bank: int = BANK, interpret: bool = True):
 @functools.partial(jax.jit, static_argnames=("bank", "interpret"))
 def rfc_decode_pallas(values: jnp.ndarray, hot: jnp.ndarray, bank: int = BANK,
                       interpret: bool = True) -> jnp.ndarray:
+    """Bank-decompact via the transposed one-hot permutation matmul:
+    (values, hot) (rows, C) -> dense (rows, C).  Exact inverse of
+    :func:`rfc_encode_pallas` on post-ReLU data."""
     rows, cols = values.shape
     grid, spec = _grid_specs(rows, cols, 1)
     return pl.pallas_call(

@@ -20,6 +20,15 @@ a StreamState (ring buffers + running logit pool) and reports frames/s and
 per-frame latency, plus top-1 agreement with the clip engine post-drain.
 
     PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced --stream
+
+``--sessions S`` serves *multi-session* live traffic: a fixed-capacity
+S-slot session slab (one jitted ``step_frames`` tick for all slots) driven
+by the host-side SlabScheduler — Poisson session arrivals, admission into
+free slots, flush-drain eviction with per-session logits.  Reports
+aggregate frames/s, per-session latency p50/p99, slot occupancy and
+admission-to-first-logit delay, and writes ``BENCH_sessions.json``.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced --sessions 4
 """
 from __future__ import annotations
 
@@ -153,6 +162,34 @@ def serve_gcn_stream(arch: str, *, reduced: bool = True, batch: int = 4,
     return results
 
 
+def serve_gcn_sessions(arch: str, *, reduced: bool = True, sessions: int = 4,
+                       n_sessions: int = 0, rate: float = 0.0, seed: int = 0,
+                       backends=("reference", "pallas")):
+    """Multi-session stream serving: Poisson traffic through a session slab.
+
+    One ``sessions``-slot slab per backend (two-stream ensemble), driven by
+    ``repro.launch.sessions.SlabScheduler`` — see that module for the
+    slab/scheduler split.  Returns the per-backend metrics dicts from
+    :func:`repro.launch.sessions.run_sessions` (aggregate frames/s,
+    latency p50/p99, occupancy, admission-to-first-logit)."""
+    from repro.launch import sessions as sess
+
+    cfg = get_config(arch, reduced=reduced)
+    assert cfg.family == "gcn", f"{arch} is not a gcn-family arch"
+    n = n_sessions or 3 * sessions
+    # default mean inter-arrival ~ clip_len / slots keeps the slab busy
+    # without unbounded queueing (offered load ≈ capacity)
+    mean_gap = rate if rate > 0 else max(2.0, cfg.gcn_frames / sessions)
+    results = []
+    for backend in backends:
+        r = sess.run_sessions(cfg, slots=sessions, n_sessions=n,
+                              mean_interarrival=mean_gap, backend=backend,
+                              seed=seed)
+        results.append(r)
+    sess.write_bench(results)
+    return results
+
+
 def generate(arch: str, *, reduced: bool = True, batch: int = 4,
              prompt_len: int = 16, gen: int = 32, seed: int = 0,
              greedy: bool = True, temperature: float = 1.0):
@@ -208,10 +245,31 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="gcn: per-frame continual inference (frames/s + "
                          "per-frame latency) instead of batched clips")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="gcn: serve Poisson multi-session traffic through "
+                         "an S-slot session slab (writes BENCH_sessions.json)")
+    ap.add_argument("--n-sessions", type=int, default=0,
+                    help="gcn: total sessions to serve (default 3×slots)")
     args = ap.parse_args()
     cfg = get_config(args.arch, reduced=args.reduced)
     if cfg.family == "gcn":
         backends = BACKENDS if args.backend == "both" else (args.backend,)
+        if args.sessions:
+            results = serve_gcn_sessions(
+                args.arch, reduced=args.reduced, sessions=args.sessions,
+                n_sessions=args.n_sessions, backends=backends)
+            for r in results:
+                print(f"backend={r['backend']} [sessions]: "
+                      f"{r['sessions']} sessions over {r['slots']} slots, "
+                      f"{r['frames_per_s']:.1f} frames/s aggregate, "
+                      f"occupancy {r['occupancy']*100:.0f}%, "
+                      f"session latency p50={r['latency_ms_p50']:.0f}ms "
+                      f"p99={r['latency_ms_p99']:.0f}ms, "
+                      f"first-logit p50={r['first_logit_ms_p50']:.0f}ms "
+                      f"({r['first_logit_frames']} frames), "
+                      f"queue wait {r['queue_wait_ticks_mean']:.1f} ticks")
+            print("# wrote BENCH_sessions.json")
+            return
         if args.stream:
             res = serve_gcn_stream(args.arch, reduced=args.reduced,
                                    batch=args.batch or 4, backends=backends)

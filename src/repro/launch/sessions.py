@@ -1,0 +1,351 @@
+"""Multi-session stream serving: a session-slab scheduler over the engine's
+per-frame step.
+
+The streaming engine (PR 2) serves *one* lockstep batch of streams; live
+traffic is many independent skeleton sessions arriving and ending at
+different times — the continual-inference regime of CoST-GCN (Hedegaard et
+al., 2022) at the throughput target of the ROADMAP.  This module is the
+host-side half of that service:
+
+  device  — a fixed-capacity **session slab**: one ``engine.StreamState``
+            whose leading axis is S slots, advanced by one jitted
+            ``engine.step_frames(plan, slab, frames[S], valid[S], reset[S])``
+            per tick (compiled once per ExecutionPlan, any occupancy).
+  host    — :class:`SlabScheduler`: a slot table + FIFO admission queue.
+            Arrivals wait for a free slot, admission zeroes the slot's
+            rings/pool via the traced reset mask, active sessions feed real
+            frames (valid=True), finished clips drain their per-block
+            'same'-padding latency with flush frames (valid=False), and the
+            drained slot's logits row is captured as the session's
+            prediction before the slot is recycled.
+
+The scheduler is pure host bookkeeping (numpy in, numpy out) so it unit-
+tests without jax; :func:`run_sessions` couples it to the jitted two-stream
+slab step and measures the serving metrics the ROADMAP asks for: aggregate
+frames/s, per-session completion latency p50/p99, slot occupancy, and
+admission-to-first-logit delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_BENCH_PATH = "BENCH_sessions.json"
+
+
+# ---------------------------------------------------------------------------
+# load generation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SessionRequest:
+    """One incoming stream session: a skeleton clip arriving at a tick."""
+
+    sid: int
+    arrival: int             # tick index at which the session arrives
+    clip: np.ndarray         # (T, V, C) raw skeleton frames
+
+
+@dataclasses.dataclass
+class SessionRecord:
+    """A completed session: identity, timing, and the final logits."""
+
+    sid: int
+    frames: int              # clip length T (real frames)
+    arrival: int             # tick of arrival (queue entry)
+    admitted: int            # tick of slot admission
+    finished: int            # tick the drained logits were captured
+    wall_admitted: float     # monotonic seconds
+    wall_first_logit: float  # first *valid* logit contribution for this slot
+    wall_finished: float
+    logits: np.ndarray       # (num_classes,) post-drain prediction
+
+
+def poisson_arrivals(
+    n_sessions: int,
+    mean_interarrival: float,
+    lengths: Sequence[int],
+    joints: int,
+    channels: int,
+    seed: int = 0,
+    clip_source: Optional[Callable[[int, int], np.ndarray]] = None,
+) -> List[SessionRequest]:
+    """Poisson-process session arrivals (exponential inter-arrival ticks).
+
+    Each session draws a clip length uniformly from ``lengths`` and clip
+    content from ``clip_source(sid, T) -> (T, V, C)`` (standard-normal
+    synthetic skeletons by default — the serving driver swaps in the data
+    pipeline).  Returns requests sorted by arrival tick."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_interarrival, size=n_sessions)
+    arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(int)
+    reqs = []
+    for sid, at in enumerate(arrivals):
+        T = int(rng.choice(np.asarray(lengths)))
+        if clip_source is not None:
+            clip = np.asarray(clip_source(sid, T), np.float32)
+        else:
+            clip = rng.standard_normal((T, joints, channels)).astype(np.float32)
+        reqs.append(SessionRequest(sid=sid, arrival=int(at), clip=clip))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side view of one slab slot holding an admitted session."""
+
+    req: SessionRequest
+    admitted: int            # admission tick
+    rel: int                 # raw frames fed so far (clip + flush)
+    total: int               # clip length + flush drain
+    wall_admitted: float
+    wall_first_logit: float = -1.0
+
+
+class SlabScheduler:
+    """Slot table + FIFO admission queue driving ``engine.step_frames``.
+
+    Pure host logic over numpy arrays: each tick, :meth:`tick_inputs`
+    builds the (frames, valid, reset) triple the jitted slab step consumes,
+    and :meth:`tick_outputs` consumes the step's logits — finalising any
+    session whose flush drain completed this tick and recycling its slot.
+
+    Timing is delegated to two plan-derived callables so the scheduler
+    itself stays jax-free: ``flush_frames(T)`` (the per-block 'same'-padding
+    drain after a T-frame clip, ``engine.stream_flush_frames``) and
+    ``first_logit_delay`` (raw frames from admission to the first valid
+    logit, ``engine.stream_first_logit_delay``)."""
+
+    def __init__(self, slots: int, joints: int, channels: int,
+                 flush_frames: Callable[[int], int],
+                 first_logit_delay: int):
+        self.slots: List[Optional[_Slot]] = [None] * slots
+        self.joints, self.channels = joints, channels
+        self.flush_frames = flush_frames
+        self.first_logit_delay = first_logit_delay
+        self.queue: deque[SessionRequest] = deque()
+        self.completed: List[SessionRecord] = []
+        self.occupancy_samples: List[float] = []
+        self.valid_frames = 0        # real (clip) frames fed across all slots
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: SessionRequest) -> None:
+        """Queue an arrived session (FIFO until a slot frees up)."""
+        self.queue.append(req)
+
+    def busy(self) -> int:
+        """Occupied slot count (active + draining)."""
+        return sum(s is not None for s in self.slots)
+
+    def idle(self) -> bool:
+        """True when no session is queued or occupying a slot."""
+        return not self.queue and self.busy() == 0
+
+    # -- one tick ------------------------------------------------------------
+
+    def tick_inputs(self, tick: int, now: float):
+        """Admit queued sessions into free slots and build the step inputs.
+
+        Returns ``(frames (S, V, C) f32, valid (S,) bool, reset (S,) bool)``:
+        reset marks this tick's admissions (the traced slot zeroing), valid
+        marks slots feeding real clip frames (False = flush drain or free
+        slot — both take the zero-padding path)."""
+        S = len(self.slots)
+        for s in range(S):
+            if self.slots[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[s] = _Slot(
+                    req=req, admitted=tick, rel=0,
+                    total=len(req.clip) + self.flush_frames(len(req.clip)),
+                    wall_admitted=now)
+        frames = np.zeros((S, self.joints, self.channels), np.float32)
+        valid = np.zeros((S,), bool)
+        reset = np.zeros((S,), bool)
+        for s, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            reset[s] = slot.admitted == tick
+            if slot.rel < len(slot.req.clip):
+                frames[s] = slot.req.clip[slot.rel]
+                valid[s] = True
+                self.valid_frames += 1
+        self.occupancy_samples.append(self.busy() / S)
+        return frames, valid, reset
+
+    def tick_outputs(self, tick: int, logits: np.ndarray, now: float
+                     ) -> List[SessionRecord]:
+        """Advance slot clocks with this tick's logits; evict drained slots.
+
+        ``logits`` is the slab step's (S, num_classes) output.  A slot whose
+        session just produced its first valid logit records the wall time
+        (admission-to-first-logit delay); a slot whose flush drain completed
+        captures its logits row as the session's final prediction, is freed,
+        and the finished :class:`SessionRecord` is returned (and appended to
+        ``self.completed``)."""
+        done: List[SessionRecord] = []
+        for s, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if slot.rel == self.first_logit_delay - 1:
+                slot.wall_first_logit = now
+            if slot.rel == slot.total - 1:
+                rec = SessionRecord(
+                    sid=slot.req.sid, frames=len(slot.req.clip),
+                    arrival=slot.req.arrival, admitted=slot.admitted,
+                    finished=tick, wall_admitted=slot.wall_admitted,
+                    wall_first_logit=slot.wall_first_logit,
+                    wall_finished=now,
+                    logits=np.asarray(logits[s]))
+                done.append(rec)
+                self.completed.append(rec)
+                self.slots[s] = None
+            else:
+                slot.rel += 1
+        return done
+
+
+# ---------------------------------------------------------------------------
+# the serving loop
+# ---------------------------------------------------------------------------
+
+def run_sessions(
+    cfg,
+    *,
+    slots: int = 8,
+    n_sessions: int = 16,
+    mean_interarrival: float = 8.0,
+    lengths: Optional[Sequence[int]] = None,
+    backend: str = "reference",
+    quant: bool = True,
+    seed: int = 0,
+    max_ticks: int = 100_000,
+) -> Dict:
+    """Serve ``n_sessions`` Poisson-arriving skeleton sessions through an
+    ``slots``-slot slab with the two-stream (joint + bone) ensemble.
+
+    Compiles one ExecutionPlan per stream for ``backend``, calibrates the
+    shared frozen BN statistics once from a pipeline clip batch, then runs
+    the scheduler tick loop: one jitted ``make_gcn_slab_step`` call per
+    tick serves every slot (admissions via the traced reset mask, drains
+    via per-slot validity).  Returns the metrics dict (also the row written
+    to ``BENCH_sessions.json`` by ``serve --sessions``) plus the completed
+    :class:`SessionRecord` list under ``"records"``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.agcn import engine
+    from repro.core.agcn.model import bone_stream
+    from repro.core.pruning.plan import plan_from_config
+    from repro.data.pipeline import DataConfig, skeleton_batches
+    from repro.models import registry
+    from repro.train.steps import make_gcn_slab_step
+
+    prune_plan = plan_from_config(cfg)
+    kj, kb = jax.random.split(jax.random.PRNGKey(seed))
+    params_joint = registry.init_params(cfg, kj)
+    params_bone = registry.init_params(cfg, kb)
+    plans = tuple(
+        engine.build_execution_plan(p, cfg, prune_plan, quant=quant,
+                                    backend=backend)
+        for p in (params_joint, params_bone))
+
+    # calibration + load: clips come from the same synthetic NTU pipeline
+    dcfg = DataConfig(global_batch=max(4, slots), seq_len=cfg.gcn_frames,
+                      seed=seed)
+    calib = jnp.asarray(next(skeleton_batches(cfg, dcfg))["x"])
+    slabs = (
+        engine.init_session_slab(plans[0], slots, x_calib=calib),
+        engine.init_session_slab(plans[1], slots,
+                                 x_calib=bone_stream(calib)),
+    )
+
+    if lengths is None:
+        lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))
+    pool = np.asarray(next(skeleton_batches(
+        cfg, DataConfig(global_batch=n_sessions, seq_len=cfg.gcn_frames,
+                        seed=seed + 1)))["x"])
+
+    def clip_source(sid: int, T: int) -> np.ndarray:
+        return pool[sid % len(pool), :T]
+
+    reqs = poisson_arrivals(
+        n_sessions, mean_interarrival, lengths,
+        cfg.gcn_joints, cfg.gcn_in_channels, seed=seed,
+        clip_source=clip_source)
+    sched = SlabScheduler(
+        slots, cfg.gcn_joints, cfg.gcn_in_channels,
+        flush_frames=lambda T: engine.stream_flush_frames(plans[0], T),
+        first_logit_delay=engine.stream_first_logit_delay(plans[0]))
+
+    step = jax.jit(make_gcn_slab_step(cfg))
+    # compile outside the timed loop (both reset variants trace identically
+    # — reset is a traced mask — so one warmup call suffices)
+    zf = jnp.zeros((slots, cfg.gcn_joints, cfg.gcn_in_channels))
+    zb = jnp.zeros((slots,), bool)
+    warm, wl = step(plans, slabs, zf, zb, zb)
+    jax.block_until_ready(wl)
+
+    pending = deque(reqs)
+    tick = 0
+    t0 = time.monotonic()
+    while tick < max_ticks:
+        while pending and pending[0].arrival <= tick:
+            sched.submit(pending.popleft())
+        if sched.idle():
+            if not pending:
+                break
+            tick = pending[0].arrival       # fast-forward empty gaps
+            continue
+        now = time.monotonic()
+        frames, valid, reset = sched.tick_inputs(tick, now)
+        slabs, logits = step(plans, slabs, jnp.asarray(frames),
+                             jnp.asarray(valid), jnp.asarray(reset))
+        logits_np = np.asarray(logits)      # blocks until the tick is done
+        sched.tick_outputs(tick, logits_np, time.monotonic())
+        tick += 1
+    wall = time.monotonic() - t0
+
+    recs = sched.completed
+    lat = np.asarray([r.wall_finished - r.wall_admitted for r in recs])
+    first = np.asarray([r.wall_first_logit - r.wall_admitted
+                        for r in recs if r.wall_first_logit >= 0])
+    qwait = np.asarray([r.admitted - r.arrival for r in recs], np.float64)
+    return {
+        "backend": backend,
+        "slots": slots,
+        "sessions": len(recs),
+        "ticks": tick,
+        "wall_s": wall,
+        "frames_per_s": sched.valid_frames / wall if wall > 0 else 0.0,
+        "ticks_per_s": tick / wall if wall > 0 else 0.0,
+        "occupancy": float(np.mean(sched.occupancy_samples)
+                           if sched.occupancy_samples else 0.0),
+        "latency_ms_p50": float(np.percentile(lat, 50) * 1e3) if len(lat) else 0.0,
+        "latency_ms_p99": float(np.percentile(lat, 99) * 1e3) if len(lat) else 0.0,
+        "first_logit_ms_p50": (float(np.percentile(first, 50) * 1e3)
+                               if len(first) else 0.0),
+        "first_logit_frames": engine.stream_first_logit_delay(plans[0]),
+        "queue_wait_ticks_mean": float(qwait.mean()) if len(qwait) else 0.0,
+        "records": recs,
+    }
+
+
+def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
+    """Write the multi-session serving rows to ``BENCH_sessions.json`` —
+    the artifact ``serve --sessions`` emits (aggregate frames/s, occupancy,
+    latency percentiles per backend)."""
+    rows = []
+    for r in results:
+        rows.append({k: v for k, v in r.items() if k != "records"})
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

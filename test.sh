@@ -4,9 +4,13 @@
 #
 # Tiers:
 #   ./test.sh           full tier — whole suite (slow cells included) plus a
-#                       benchmarks.run smoke so BENCH json emission can't rot
+#                       benchmarks.run smoke so BENCH json emission can't rot,
+#                       plus the docs gates (link + docstring coverage)
 #   ./test.sh --fast    fast tier — deselects @pytest.mark.slow (the heavy
 #                       pallas-interpret cells; markers in pyproject.toml)
+#   ./test.sh --docs    docs tier only — intra-repo markdown links must
+#                       resolve and public docstring coverage in
+#                       src/repro/{core,kernels} must hold at 100%
 # Extra args pass through to pytest (e.g. ./test.sh --fast -k streaming).
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -15,12 +19,19 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export JAX_PLATFORMS=cpu
 
 FAST=0
+DOCS=0
 ARGS=()
 for a in "$@"; do
-  if [ "$a" = "--fast" ]; then FAST=1; else ARGS+=("$a"); fi
+  case "$a" in
+    --fast) FAST=1 ;;
+    --docs) DOCS=1 ;;
+    *) ARGS+=("$a") ;;
+  esac
 done
 
-if [ "$FAST" = 1 ]; then
+if [ "$DOCS" = 1 ]; then
+  python tools/check_docs.py
+elif [ "$FAST" = 1 ]; then
   python -m pytest -x -q -m "not slow" ${ARGS[@]+"${ARGS[@]}"}
 else
   python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
@@ -30,4 +41,7 @@ else
   rm -f BENCH_kernels_bench.json
   python -m benchmarks.run --only kernels --smoke > /dev/null
   test -s BENCH_kernels_bench.json
+  # docs gates ride the full tier: broken intra-repo links or a public
+  # docstring coverage regression in core/kernels fail the build
+  python tools/check_docs.py
 fi

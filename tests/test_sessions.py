@@ -1,0 +1,222 @@
+"""Multi-session slab serving — the session-scheduler correctness contract.
+
+The lock: S sessions streamed *concurrently* through one session slab
+(staggered admissions, different clip lengths, slot recycling through the
+traced reset mask) must produce, at each session's eviction, the same
+logits as S *independent* single-stream ``step_frame`` runs — on both
+backends.  Plus host-side SlabScheduler bookkeeping (admission queueing,
+occupancy, first-logit ticks), Poisson load-generation determinism,
+``reset_slots`` isolation, and the no-retrace invariant of the slab step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.agcn import engine
+from repro.core.agcn import model as M
+from repro.core.pruning.plan import build_prune_plan
+from repro.launch import sessions as sess
+
+CFG = get_config("agcn-2s", reduced=True)
+V, C = CFG.gcn_joints, CFG.gcn_in_channels
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(1), (2, CFG.gcn_frames, V, C))
+
+
+@pytest.fixture(scope="module")
+def prune_plan(params):
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    return build_prune_plan(sw, CFG.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                            "cav-70-1", input_skip=2)
+
+
+def _run_scheduled(plan, reqs, slots):
+    """Drive a slab through the SlabScheduler; return {sid: final logits}."""
+    bn = engine.collect_bn_stats(
+        plan, jax.random.normal(jax.random.PRNGKey(1),
+                                (2, CFG.gcn_frames, V, C)))
+    slab = engine.init_session_slab(plan, slots, bn_stats=bn)
+    sched = sess.SlabScheduler(
+        slots, V, C,
+        flush_frames=lambda T: engine.stream_flush_frames(plan, T),
+        first_logit_delay=engine.stream_first_logit_delay(plan))
+    step = jax.jit(engine.step_frames)
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    i = 0
+    for tick in range(500):
+        while i < len(pending) and pending[i].arrival <= tick:
+            sched.submit(pending[i])
+            i += 1
+        if i == len(pending) and sched.idle():
+            break
+        frames, valid, reset = sched.tick_inputs(tick, 0.0)
+        slab, logits = step(plan, slab, jnp.asarray(frames),
+                            jnp.asarray(valid), jnp.asarray(reset))
+        sched.tick_outputs(tick, np.asarray(logits), 0.0)
+    assert sched.idle(), "scheduler did not drain within the tick budget"
+    return {r.sid: r.logits for r in sched.completed}, bn
+
+
+def _run_independent(plan, bn, clip):
+    """One session alone: batch-1 step_frame over clip + flush drain."""
+    state = engine.init_stream_state(plan, 1, bn_stats=bn)
+    step = jax.jit(engine.step_frame)
+    xc = jnp.asarray(clip)[None]
+    T = xc.shape[1]
+    zeros = jnp.zeros_like(xc[:, 0])
+    logits = None
+    for r in range(T + engine.stream_flush_frames(plan, T)):
+        frame = xc[:, r] if r < T else zeros
+        state, logits = step(plan, state, frame, jnp.asarray(r < T))
+    return np.asarray(logits)[0]
+
+
+# ------------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_slab_matches_independent_streams(params, prune_plan, backend):
+    """The tentpole lock: staggered concurrent sessions through the slab
+    (including a queued session admitted into a *recycled* slot) equal
+    independent single-stream runs, on the paper's pruned+quant target."""
+    plan = engine.build_execution_plan(params, CFG, prune_plan, quant=True,
+                                       backend=backend)
+    rng = np.random.default_rng(3)
+    lengths = (24, 14, 10)                 # different clip lengths
+    clips = [rng.standard_normal((T, V, C)).astype(np.float32)
+             for T in lengths]
+    # 2 slots, 3 sessions: sid 2 queues until sid 1's drain frees its slot
+    reqs = [sess.SessionRequest(sid=i, arrival=a, clip=c)
+            for i, (a, c) in enumerate(zip((0, 4, 9), clips))]
+    got, bn = _run_scheduled(plan, reqs, slots=2)
+    assert sorted(got) == [0, 1, 2]
+    for i, clip in enumerate(clips):
+        want = _run_independent(plan, bn, clip)
+        np.testing.assert_allclose(got[i], want, atol=1e-3, rtol=1e-3,
+                                   err_msg=f"session {i} (backend={backend})")
+
+
+def test_slab_step_never_retraces(params, x):
+    """Admissions, evictions and occupancy changes are traced masking: one
+    compilation serves every (reset, valid) combination."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    slab = engine.init_session_slab(plan, 3, x_calib=x)
+    traces = []
+
+    @jax.jit
+    def counted(plan, slab, frames, valid, reset):
+        traces.append(1)
+        return engine.step_frames(plan, slab, frames, valid, reset)
+
+    frames = jnp.zeros((3, V, C))
+    for valid, reset in (((1, 0, 0), (1, 0, 0)),
+                         ((1, 1, 0), (0, 1, 0)),
+                         ((0, 0, 0), (0, 0, 0))):
+        slab, _ = counted(plan, slab, frames,
+                          jnp.asarray(valid, bool), jnp.asarray(reset, bool))
+    assert len(traces) == 1
+
+
+def test_reset_slots_isolates(params, x):
+    """reset_slots zeroes exactly the masked slots' per-slot state and
+    never touches other slots or the shared frozen BN calibration."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    slab = engine.init_session_slab(plan, 2, x_calib=x)
+    step = jax.jit(engine.step_frame)
+    for r in range(4):
+        slab, _ = step(plan, slab, jnp.asarray(x[:2, r]), jnp.asarray(True))
+    reset = engine.reset_slots(slab, jnp.asarray([True, False]))
+    assert int(reset.t_raw[0]) == 0 and int(reset.t_raw[1]) == 4
+    b0 = reset.blocks[0]
+    assert not np.asarray(b0["ring_s"][0]).any()
+    np.testing.assert_array_equal(np.asarray(b0["ring_s"][1]),
+                                  np.asarray(slab.blocks[0]["ring_s"][1]))
+    for site in reset.bn_stats:
+        np.testing.assert_array_equal(
+            np.asarray(reset.bn_stats[site]["mean"]),
+            np.asarray(slab.bn_stats[site]["mean"]))
+
+
+# --------------------------------------------------------------- scheduler
+
+def _mini_sched(slots=2, flush=3, first=2):
+    return sess.SlabScheduler(slots, V, C,
+                              flush_frames=lambda T: flush,
+                              first_logit_delay=first)
+
+
+def test_scheduler_admission_queueing_and_recycling():
+    """More sessions than slots: FIFO queueing, admission only into free
+    slots, reset raised exactly on the admission tick, eviction after
+    clip + flush, recycled slot admits the queued session."""
+    sched = _mini_sched(slots=1, flush=2)
+    clip = np.zeros((3, V, C), np.float32)
+    sched.submit(sess.SessionRequest(sid=0, arrival=0, clip=clip))
+    sched.submit(sess.SessionRequest(sid=1, arrival=0, clip=clip))
+    logits = np.zeros((1, 4))
+    done_at = {}
+    for tick in range(12):
+        if sched.idle():
+            break
+        frames, valid, reset = sched.tick_inputs(tick, 0.0)
+        if tick in (0, 5):                  # admissions: tick 0 and recycle
+            assert reset[0]
+        else:
+            assert not reset[0]
+        assert valid[0] == (tick in (0, 1, 2, 5, 6, 7))  # clip frames only
+        for rec in sched.tick_outputs(tick, logits, 0.0):
+            done_at[rec.sid] = tick
+    # total per session = 3 clip + 2 flush = 5 ticks; sid 1 waits 5 ticks
+    assert done_at == {0: 4, 1: 9}
+    assert [r.sid for r in sched.completed] == [0, 1]
+    assert sched.completed[1].admitted == 5
+    assert sched.completed[1].arrival == 0
+
+
+def test_scheduler_counts_valid_frames_and_occupancy():
+    sched = _mini_sched(slots=2, flush=1)
+    clip = np.zeros((2, V, C), np.float32)
+    sched.submit(sess.SessionRequest(sid=0, arrival=0, clip=clip))
+    logits = np.zeros((2, 4))
+    for tick in range(3):
+        sched.tick_inputs(tick, 0.0)
+        sched.tick_outputs(tick, logits, 0.0)
+    assert sched.valid_frames == 2          # flush ticks don't count
+    assert sched.occupancy_samples == [0.5, 0.5, 0.5]
+
+
+def test_poisson_arrivals_deterministic():
+    a = sess.poisson_arrivals(8, 4.0, (10, 20), V, C, seed=7)
+    b = sess.poisson_arrivals(8, 4.0, (10, 20), V, C, seed=7)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert a[0].arrival == 0                # first arrival anchors the clock
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    assert all(r.clip.shape in ((10, V, C), (20, V, C)) for r in a)
+    np.testing.assert_array_equal(a[3].clip, b[3].clip)
+
+
+def test_run_sessions_end_to_end():
+    """The serve --sessions path (two-stream ensemble, Poisson traffic):
+    every session completes, metrics are populated, logits finite."""
+    res = sess.run_sessions(CFG, slots=2, n_sessions=3,
+                            mean_interarrival=4.0, lengths=(8, 12),
+                            backend="reference", seed=0)
+    assert res["sessions"] == 3
+    assert res["frames_per_s"] > 0 and 0 < res["occupancy"] <= 1
+    assert res["first_logit_frames"] == 41  # reduced cfg, worked by hand
+    for rec in res["records"]:
+        assert np.isfinite(rec.logits).all()
+        assert rec.frames in (8, 12)
+        # occupancy ticks = clip + flush drain (37 for the reduced cfg's
+        # K=9 / skip-2 / stride-2 pipeline, same hand-worked number as
+        # test_streaming.test_flush_frames_formula)
+        assert rec.finished - rec.admitted + 1 == rec.frames + 37

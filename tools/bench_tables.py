@@ -1,0 +1,50 @@
+"""Render the checked-in BENCH_*.json artifacts as the README's markdown
+tables (stdlib only).
+
+    python tools/bench_tables.py [BENCH_kernels_bench.json ...]
+
+The README's benchmark section is this script's output pasted in — when
+the artifacts are regenerated (``python -m benchmarks.run --only <mod>``),
+re-run this and refresh the tables so prose never drifts from the numbers.
+Rows carry whatever caveat the benchmark emitted (the checked-in artifacts
+come from ``--smoke`` runs: one timed iteration including compile,
+interpret-mode CPU — structure, not TPU wall time).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DEFAULT = ["BENCH_kernels_bench.json", "BENCH_throughput.json",
+           "BENCH_sessions.json"]
+
+
+def render(path: pathlib.Path) -> str:
+    rows = json.load(open(path))
+    out = [f"### `{path.name}`", "",
+           "| row | µs/call | derived |", "|---|---:|---|"]
+    for r in rows:
+        if isinstance(r, dict) and "name" in r:
+            us = r.get("us_per_call", 0.0)
+            out.append(f"| `{r['name']}` | {us:,.0f} | {r.get('derived', '')} |")
+        else:  # sessions rows are flat metric dicts, one per backend
+            out.append(
+                f"| `sessions/{r['backend']}` | — | "
+                f"{r['sessions']} sessions / {r['slots']} slots, "
+                f"{r['frames_per_s']:.1f} frames/s, "
+                f"occupancy {r['occupancy']*100:.0f}%, "
+                f"p50/p99 {r['latency_ms_p50']:.0f}/{r['latency_ms_p99']:.0f}ms |")
+    return "\n".join(out) + "\n"
+
+
+def main() -> None:
+    """Print one markdown table per artifact (missing files are skipped)."""
+    paths = [pathlib.Path(p) for p in (sys.argv[1:] or DEFAULT)]
+    for p in paths:
+        if p.exists():
+            print(render(p))
+
+
+if __name__ == "__main__":
+    main()

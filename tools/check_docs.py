@@ -1,0 +1,103 @@
+"""Docs tier (./test.sh --docs): stdlib-only documentation gates.
+
+Two checks, both hard failures:
+
+1. **Intra-repo markdown links** — every relative link in README.md and
+   docs/**/*.md must resolve to a file in the repo (external http(s)/mailto
+   links and pure #anchors are skipped; a trailing #anchor on a file link
+   is stripped before the existence check).  Docs that point at moved or
+   deleted files are worse than no docs.
+
+2. **Docstring coverage** — every *public* module, class, function and
+   method under ``src/repro/core`` and ``src/repro/kernels`` must carry a
+   docstring (names starting with ``_`` are exempt).  These two trees hold
+   the paper mechanisms (pruning, RFC format, cavity/graph kernels, the
+   execution engine); the coverage floor is 100%, so any public addition
+   without a shape-contract docstring fails CI rather than rotting.
+
+Run directly (``python tools/check_docs.py``) or via ``./test.sh --docs``;
+the full ``./test.sh`` tier includes it.  Exit code 0 = both gates hold.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("**/*.md"))]
+COVERED_TREES = [REPO / "src/repro/core", REPO / "src/repro/kernels"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list[str]:
+    """Broken intra-repo links in README.md + docs/**/*.md."""
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(REPO)}: file missing")
+            continue
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    errors.append(
+                        f"{md.relative_to(REPO)}:{n}: broken link -> {target}")
+    return errors
+
+
+def _public_defs(tree: ast.Module, modname: str):
+    """Yield (qualname, node) for the module + every public def/class."""
+    yield modname, tree
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if node.name.startswith("_"):
+                continue
+            yield f"{modname}.{node.name}", node
+            if isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)) \
+                            and not sub.name.startswith("_"):
+                        yield f"{modname}.{node.name}.{sub.name}", sub
+
+
+def check_docstrings() -> tuple[list[str], int, int]:
+    """Public defs without docstrings under the covered trees."""
+    missing, total = [], 0
+    for root in COVERED_TREES:
+        for py in sorted(root.glob("**/*.py")):
+            modname = str(py.relative_to(REPO / "src")).removesuffix(".py") \
+                .replace("/", ".")
+            tree = ast.parse(py.read_text())
+            for qual, node in _public_defs(tree, modname):
+                total += 1
+                if not ast.get_docstring(node):
+                    missing.append(qual)
+    return missing, total - len(missing), total
+
+
+def main() -> int:
+    link_errors = check_links()
+    for e in link_errors:
+        print(f"LINK  {e}")
+    missing, have, total = check_docstrings()
+    for m in missing:
+        print(f"DOC   missing docstring: {m}")
+    pct = 100.0 * have / total if total else 100.0
+    print(f"docs: {len(DOC_FILES)} markdown files, "
+          f"{len(link_errors)} broken links; "
+          f"docstring coverage {have}/{total} ({pct:.1f}%) "
+          f"over {', '.join(str(t.relative_to(REPO)) for t in COVERED_TREES)}")
+    return 1 if (link_errors or missing) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
