@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -39,6 +40,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="single timed iteration per row (fast end-to-end "
                          "check that BENCH json emission still works)")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_<module>.json artifacts — "
+                         "smoke runs should point this at a temp dir so "
+                         "1-iteration timings never overwrite the checked-in "
+                         "artifacts (see test.sh)")
     # unknown flags (e.g. --backend) pass through to the modules' own parsers
     args, _ = ap.parse_known_args()
     if args.smoke:
@@ -61,7 +67,7 @@ def main() -> None:
             common.emit(f"{m}/ERROR", 0.0, repr(e))
         rows = common.drain_rows()
         if rows and (only or args.json):
-            path = f"BENCH_{m}.json"
+            path = os.path.join(args.out_dir, f"BENCH_{m}.json")
             with open(path, "w") as f:
                 json.dump(rows, f, indent=1)
             print(f"# wrote {len(rows)} rows -> {path}", file=sys.stderr)

@@ -137,6 +137,34 @@ def main():
                  f"frames_per_s={n_act * 1e6 / tS:.1f} "
                  f"active={n_act}/{S} per_active_slot_us={tS / n_act:.0f} "
                  f"(interpret CPU)")
+        # preempt-vs-fifo: a preemption tick pays a snapshot gather of the
+        # victim slot plus a restore scatter of the incoming session's
+        # snapshot before the step — measure that marginal QoS cost against
+        # the plain fifo tick at the serving slot count
+        S = 4
+        slab = engine.init_session_slab(ep, S, x_calib=x)
+        frames_in = jnp.zeros((S, cfg.gcn_joints, cfg.gcn_in_channels))
+        valid = jnp.asarray(np.arange(S) % 2 == 0)
+        noreset = jnp.zeros((S,), bool)
+        stored = jax.jit(engine.snapshot_slots)(slab, jnp.asarray(1))
+
+        @jax.jit
+        def preempt_tick(ep, slab, stored, frames, valid):
+            snap = engine.snapshot_slots(slab, jnp.asarray(0))
+            slab = engine.restore_slots(slab, jnp.asarray(0), stored)
+            state, logits = engine.step_frames(ep, slab, frames, valid,
+                                               noreset)
+            return state, logits, snap
+
+        # more iterations than the other rows: this row is a *difference* of
+        # two timings, so interpret-mode CPU noise bites twice
+        t_fifo = time_fn(stepS, ep, slab, frames_in, valid, noreset, iters=9)
+        t_pre = time_fn(preempt_tick, ep, slab, stored, frames_in, valid,
+                        iters=9)
+        emit(f"throughput/measured/sessions/{backend}/S{S}_preempt", t_pre,
+             f"fifo_tick_us={t_fifo:.0f} "
+             f"preempt_overhead={(t_pre / t_fifo - 1) * 100:.1f}% "
+             f"(snapshot+restore+step, interpret CPU)")
 
 
 if __name__ == "__main__":

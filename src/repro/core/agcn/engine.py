@@ -582,8 +582,9 @@ def collect_bn_stats(plan: ExecutionPlan, x: jnp.ndarray
 # simultaneously one lockstep batch (every slot fed the same clip — the
 # PR-2 streaming mode) and a **session slab**: independent live sessions
 # occupying slots, admitted/evicted at different times by a host-side
-# scheduler (repro.launch.sessions) through :func:`reset_slots` and
-# :func:`step_frames`.  Free/dead slots are masked with ``valid=False``
+# scheduler (repro.launch.sessions) through :func:`reset_slots`,
+# :func:`step_frames` and the preemption pair :func:`snapshot_slots` /
+# :func:`restore_slots`.  Free/dead slots are masked with ``valid=False``
 # frames through the existing clip-validity machinery, so one compiled
 # step serves any slot occupancy without retracing.
 
@@ -714,6 +715,73 @@ def reset_slots(state: StreamState, free) -> StreamState:
         t_raw=z(state.t_raw), blocks=blocks,
         pool_ring=z(state.pool_ring) if state.pool_ring is not None else None,
         pool_sum=z(state.pool_sum), pool_t=z(state.pool_t),
+        bn_stats=state.bn_stats, rfc=rfc)
+
+
+def snapshot_slots(state: StreamState, idx) -> Dict[str, Any]:
+    """Gather slot ``idx``'s per-slot streaming state out of the slab — the
+    preemption capture.
+
+    ``idx`` is a scalar (one slot) or an (k,) int vector (k slots); pass it
+    as a traced array so every preemption reuses one jitted gather, never a
+    retrace.  The snapshot covers **every** per-slot leaf of the
+    :class:`StreamState` pytree — rings, validity bits, block clocks, logit
+    pools, RFC carries, the raw-frame counter — and deliberately excludes
+    ``bn_stats``: the frozen calibration is plan-level, shared by all slots,
+    and travels with the plan rather than the session.  The returned dict
+    is itself a pytree, so it rides jit boundaries and host round-trips.
+
+    The locked invariant (tests/test_sessions.py, both backends):
+    snapshot -> evict -> arbitrary foreign traffic in the slot ->
+    :func:`restore_slots` -> resume produces logits identical (<=1e-3) to
+    the uninterrupted session."""
+    idx = jnp.asarray(idx, jnp.int32)
+
+    def g(leaf):
+        return jnp.take(leaf, idx, axis=0)
+
+    return {
+        "t_raw": g(state.t_raw),
+        "blocks": [{k: g(v) for k, v in b.items()} for b in state.blocks],
+        "pool_ring": (g(state.pool_ring)
+                      if state.pool_ring is not None else None),
+        "pool_sum": g(state.pool_sum),
+        "pool_t": g(state.pool_t),
+        "rfc": ([{k: g(v) for k, v in r.items()} for r in state.rfc]
+                if state.rfc is not None else None),
+    }
+
+
+def restore_slots(state: StreamState, idx, snap: Dict[str, Any]
+                  ) -> StreamState:
+    """Scatter a :func:`snapshot_slots` capture back into slot ``idx`` — the
+    preemption restore.
+
+    The inverse of the snapshot gather: every per-slot leaf of ``snap`` is
+    written into row ``idx`` of the corresponding slab leaf (one traced
+    scatter when ``idx`` rides as an array — never a retrace), all other
+    slots are untouched, and the shared frozen BN statistics stay the
+    plan-level calibration of ``state``.  After the restore the slot resumes
+    exactly where the snapshot left it: same ring phases, same block
+    clocks, same running pool, so the next ``step_frame`` continues the
+    preempted session as if it was never evicted."""
+    idx = jnp.asarray(idx, jnp.int32)
+
+    def s(leaf, sv):
+        return leaf.at[idx].set(jnp.asarray(sv, leaf.dtype))
+
+    blocks = [{k: s(v, sb[k]) for k, v in b.items()}
+              for b, sb in zip(state.blocks, snap["blocks"])]
+    rfc = None
+    if state.rfc is not None:
+        rfc = [{k: s(v, sr[k]) for k, v in r.items()}
+               for r, sr in zip(state.rfc, snap["rfc"])]
+    return StreamState(
+        t_raw=s(state.t_raw, snap["t_raw"]), blocks=blocks,
+        pool_ring=(s(state.pool_ring, snap["pool_ring"])
+                   if state.pool_ring is not None else None),
+        pool_sum=s(state.pool_sum, snap["pool_sum"]),
+        pool_t=s(state.pool_t, snap["pool_t"]),
         bn_stats=state.bn_stats, rfc=rfc)
 
 

@@ -26,9 +26,15 @@ S-slot session slab (one jitted ``step_frames`` tick for all slots) driven
 by the host-side SlabScheduler — Poisson session arrivals, admission into
 free slots, flush-drain eviction with per-session logits.  Reports
 aggregate frames/s, per-session latency p50/p99, slot occupancy and
-admission-to-first-logit delay, and writes ``BENCH_sessions.json``.
+admission-to-first-logit delay, and merges rows into
+``BENCH_sessions.json``.  ``--qos fifo|preempt|deadline`` selects the
+scheduler policy (``preempt`` snapshot-evicts low-priority sessions for
+queued high-priority ones via ``engine.snapshot_slots``/``restore_slots``;
+``deadline`` drops expired sessions), ``--preempt-ratio`` the
+high-priority traffic mix.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced --sessions 4
+    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced \
+        --sessions 4 [--qos preempt --preempt-ratio 0.25]
 """
 from __future__ import annotations
 
@@ -164,14 +170,20 @@ def serve_gcn_stream(arch: str, *, reduced: bool = True, batch: int = 4,
 
 def serve_gcn_sessions(arch: str, *, reduced: bool = True, sessions: int = 4,
                        n_sessions: int = 0, rate: float = 0.0, seed: int = 0,
-                       backends=("reference", "pallas")):
+                       backends=("reference", "pallas"), qos: str = "fifo",
+                       preempt_ratio: float = 0.25, deadline_slack: int = 25):
     """Multi-session stream serving: Poisson traffic through a session slab.
 
     One ``sessions``-slot slab per backend (two-stream ensemble), driven by
-    ``repro.launch.sessions.SlabScheduler`` — see that module for the
-    slab/scheduler split.  Returns the per-backend metrics dicts from
+    ``repro.launch.sessions.SlabScheduler`` under the ``qos`` policy
+    (``fifo`` run-to-completion, ``preempt`` priority snapshot-eviction,
+    ``deadline`` expiry drops) — see that module for the slab/scheduler
+    split.  ``preempt_ratio`` sets the high-priority traffic mix (every
+    policy; same seed draws the same labels, so a fifo run is the preempt
+    run's baseline).  Returns the per-backend metrics dicts from
     :func:`repro.launch.sessions.run_sessions` (aggregate frames/s,
-    latency p50/p99, occupancy, admission-to-first-logit)."""
+    per-priority latency p50/p99, busy + time-weighted occupancy,
+    preemption/restore counts, deadline-miss rate)."""
     from repro.launch import sessions as sess
 
     cfg = get_config(arch, reduced=reduced)
@@ -184,7 +196,8 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, sessions: int = 4,
     for backend in backends:
         r = sess.run_sessions(cfg, slots=sessions, n_sessions=n,
                               mean_interarrival=mean_gap, backend=backend,
-                              seed=seed)
+                              seed=seed, qos=qos, preempt_ratio=preempt_ratio,
+                              deadline_slack=deadline_slack)
         results.append(r)
     sess.write_bench(results)
     return results
@@ -231,6 +244,7 @@ def generate(arch: str, *, reduced: bool = True, batch: int = 4,
 
 def main():
     from repro.core.agcn.engine import BACKENDS
+    from repro.launch.sessions import QOS_POLICIES
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -250,6 +264,17 @@ def main():
                          "an S-slot session slab (writes BENCH_sessions.json)")
     ap.add_argument("--n-sessions", type=int, default=0,
                     help="gcn: total sessions to serve (default 3×slots)")
+    ap.add_argument("--qos", default="fifo", choices=QOS_POLICIES,
+                    help="gcn sessions: scheduler policy — fifo "
+                         "run-to-completion, preempt (priority snapshot-"
+                         "eviction), deadline (expiry drops)")
+    ap.add_argument("--preempt-ratio", type=float, default=0.25,
+                    help="gcn sessions: fraction of high-priority sessions "
+                         "in the generated load (every policy — a fifo run "
+                         "with the same seed baselines a preempt run)")
+    ap.add_argument("--deadline-slack", type=int, default=25,
+                    help="gcn sessions: extra ticks past each session's "
+                         "minimal service time before its deadline")
     args = ap.parse_args()
     cfg = get_config(args.arch, reduced=args.reduced)
     if cfg.family == "gcn":
@@ -257,18 +282,33 @@ def main():
         if args.sessions:
             results = serve_gcn_sessions(
                 args.arch, reduced=args.reduced, sessions=args.sessions,
-                n_sessions=args.n_sessions, backends=backends)
+                n_sessions=args.n_sessions, backends=backends, qos=args.qos,
+                preempt_ratio=args.preempt_ratio,
+                deadline_slack=args.deadline_slack)
             for r in results:
-                print(f"backend={r['backend']} [sessions]: "
+                print(f"backend={r['backend']} [sessions qos={r['qos']}]: "
                       f"{r['sessions']} sessions over {r['slots']} slots, "
                       f"{r['frames_per_s']:.1f} frames/s aggregate, "
-                      f"occupancy {r['occupancy']*100:.0f}%, "
+                      f"occupancy {r['occupancy']*100:.0f}% time-weighted "
+                      f"({r['occupancy_busy']*100:.0f}% busy), "
                       f"session latency p50={r['latency_ms_p50']:.0f}ms "
                       f"p99={r['latency_ms_p99']:.0f}ms, "
                       f"first-logit p50={r['first_logit_ms_p50']:.0f}ms "
-                      f"({r['first_logit_frames']} frames), "
+                      f"({r['first_logit_frames']} frames, "
+                      f"{r['sessions_no_first_logit']} without), "
                       f"queue wait {r['queue_wait_ticks_mean']:.1f} ticks")
-            print("# wrote BENCH_sessions.json")
+                for p, pl in sorted(r["latency_ms_by_priority"].items()):
+                    print(f"  priority {p}: n={pl['n']} "
+                          f"p50={pl['p50_ms']:.0f}ms p99={pl['p99_ms']:.0f}ms "
+                          f"(arrival→finish p50={pl['e2e_p50_ticks']:.0f} "
+                          f"p99={pl['e2e_p99_ticks']:.0f} ticks)")
+                if r["qos"] == "preempt":
+                    print(f"  preemptions={r['preemptions']} "
+                          f"restores={r['restores']}")
+                if r["qos"] == "deadline":
+                    print(f"  deadline missed={r['deadline_missed']} "
+                          f"(miss rate {r['deadline_miss_rate']*100:.0f}%)")
+            print("# merged BENCH_sessions.json")
             return
         if args.stream:
             res = serve_gcn_stream(args.arch, reduced=args.reduced,

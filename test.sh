@@ -35,12 +35,14 @@ elif [ "$FAST" = 1 ]; then
   python -m pytest -x -q -m "not slow" ${ARGS[@]+"${ARGS[@]}"}
 else
   python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
-  # BENCH json emission smoke: one timed iteration, must produce the artifact
-  # (remove any stale copy first — a leftover file must not mask a rotted
-  # emission path)
-  rm -f BENCH_kernels_bench.json
-  python -m benchmarks.run --only kernels --smoke > /dev/null
-  test -s BENCH_kernels_bench.json
+  # BENCH json emission smoke: one timed iteration, must produce the artifact.
+  # Emit into a temp dir so the 1-iteration junk timings never dirty the
+  # *tracked* BENCH_kernels_bench.json (an empty dir also means no stale copy
+  # can mask a rotted emission path)
+  SMOKE_DIR=$(mktemp -d)
+  trap 'rm -rf "$SMOKE_DIR"' EXIT
+  python -m benchmarks.run --only kernels --smoke --out-dir "$SMOKE_DIR" > /dev/null
+  test -s "$SMOKE_DIR/BENCH_kernels_bench.json"
   # docs gates ride the full tier: broken intra-repo links or a public
   # docstring coverage regression in core/kernels fail the build
   python tools/check_docs.py

@@ -28,13 +28,22 @@ def render(path: pathlib.Path) -> str:
         if isinstance(r, dict) and "name" in r:
             us = r.get("us_per_call", 0.0)
             out.append(f"| `{r['name']}` | {us:,.0f} | {r.get('derived', '')} |")
-        else:  # sessions rows are flat metric dicts, one per backend
+        else:  # sessions rows are flat metric dicts, one per (backend, qos)
+            qos = r.get("qos", "fifo")
+            extra = ""
+            if r.get("preemptions"):
+                extra = (f", preempt/restore "
+                         f"{r['preemptions']}/{r.get('restores', 0)}")
+            if r.get("deadline_missed"):
+                extra += (f", missed {r['deadline_missed']} "
+                          f"({r.get('deadline_miss_rate', 0)*100:.0f}%)")
             out.append(
-                f"| `sessions/{r['backend']}` | — | "
+                f"| `sessions/{r['backend']}/{qos}` | — | "
                 f"{r['sessions']} sessions / {r['slots']} slots, "
                 f"{r['frames_per_s']:.1f} frames/s, "
-                f"occupancy {r['occupancy']*100:.0f}%, "
-                f"p50/p99 {r['latency_ms_p50']:.0f}/{r['latency_ms_p99']:.0f}ms |")
+                f"occupancy(time-weighted) {r['occupancy']*100:.0f}%, "
+                f"p50/p99 {r['latency_ms_p50']:.0f}/"
+                f"{r['latency_ms_p99']:.0f}ms{extra} |")
     return "\n".join(out) + "\n"
 
 
