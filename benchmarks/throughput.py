@@ -130,7 +130,7 @@ def main():
             tS = time_fn(stepS, ep, slab, frames_in, jnp.asarray(valid),
                          reset, iters=3)
             # only occupied slots serve real frames — frames/s counts those
-            # (same definition as launch.sessions.run_sessions), while the
+            # (same definition as repro.serving.run_sessions), while the
             # tick itself always pays for all S slots
             n_act = int(valid.sum())
             emit(f"throughput/measured/sessions/{backend}/S{S}", tS,
@@ -165,6 +165,29 @@ def main():
              f"fifo_tick_us={t_fifo:.0f} "
              f"preempt_overhead={(t_pre / t_fifo - 1) * 100:.1f}% "
              f"(snapshot+restore+step, interpret CPU)")
+        # elastic axis: the tier-migration primitive the GcnService
+        # capacity manager executes on a grow/shrink — the service's
+        # *fixed-shape* form: always min(S_old, S_new) rows (occupied
+        # first, free-row padding), so each ordered tier pair compiles
+        # once regardless of occupancy.  Grow 4->8 and shrink 8->4,
+        # priced against the plain S=4 tick above.
+        slab8 = engine.init_session_slab(ep, 8, x_calib=x)
+        idx4 = jnp.arange(min(4, 8), dtype=jnp.int32)
+
+        @jax.jit
+        def migrate_tick(src, dst, old_idx, new_idx):
+            snap = engine.snapshot_slots(src, old_idx)
+            return engine.restore_slots(dst, new_idx, snap)
+
+        t_grow = time_fn(migrate_tick, slab, slab8, idx4, idx4, iters=9)
+        t_shrink = time_fn(migrate_tick, slab8, slab, idx4, idx4, iters=9)
+        emit(f"throughput/measured/sessions/{backend}/grow_4to8", t_grow,
+             f"rows=4 vs_fifo_tick={(t_grow / t_fifo) * 100:.0f}% "
+             f"(fixed-shape min(S_old,S_new)-row gather/scatter into "
+             f"pristine tier, interpret CPU)")
+        emit(f"throughput/measured/sessions/{backend}/shrink_8to4", t_shrink,
+             f"rows=4 vs_fifo_tick={(t_shrink / t_fifo) * 100:.0f}% "
+             f"(interpret CPU)")
 
 
 if __name__ == "__main__":

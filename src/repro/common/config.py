@@ -17,6 +17,17 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# The serve driver's --batch 0 family defaults, resolved in ONE place
+# (ModelConfig.serve_batch) — subcommand code must never hardcode its own
+# fallback, so `serve clip` / `serve stream` / legacy flag spellings can
+# not skew apart.  Keyed "<family>:<mode>", with a global fallback.
+SERVE_BATCH_DEFAULTS = {
+    "gcn:clip": 8,       # batched two-stream clip inference
+    "gcn:stream": 4,     # lockstep per-frame streaming
+    "default": 4,        # LM families (decode batch)
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """Architecture description.
@@ -111,6 +122,19 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim == 0 and self.num_heads:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    def serve_batch(self, mode: str = "", requested: int = 0) -> int:
+        """Resolve the serve driver's batch size in one place.
+
+        ``requested`` (an explicit ``--batch N``) always wins; ``0`` falls
+        back to the ``SERVE_BATCH_DEFAULTS`` entry for ``(family, mode)``
+        — e.g. ``gcn:clip`` → 8, ``gcn:stream`` → 4 — then to the global
+        default.  Every serve subcommand routes through here so defaults
+        cannot skew across CLI spellings."""
+        if requested:
+            return requested
+        return SERVE_BATCH_DEFAULTS.get(
+            f"{self.family}:{mode}", SERVE_BATCH_DEFAULTS["default"])
 
     # ---- derived sizes ----
     @property

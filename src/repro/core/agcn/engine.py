@@ -582,7 +582,7 @@ def collect_bn_stats(plan: ExecutionPlan, x: jnp.ndarray
 # simultaneously one lockstep batch (every slot fed the same clip — the
 # PR-2 streaming mode) and a **session slab**: independent live sessions
 # occupying slots, admitted/evicted at different times by a host-side
-# scheduler (repro.launch.sessions) through :func:`reset_slots`,
+# scheduler (repro.serving) through :func:`reset_slots`,
 # :func:`step_frames` and the preemption pair :func:`snapshot_slots` /
 # :func:`restore_slots`.  Free/dead slots are masked with ``valid=False``
 # frames through the existing clip-validity machinery, so one compiled
@@ -687,9 +687,36 @@ def init_session_slab(
     Identical to :func:`init_stream_state` — a slab *is* a StreamState
     whose leading axis is slot capacity S rather than a lockstep batch.
     Named separately so serving code reads as what it means; the host-side
-    admission/eviction scheduler lives in ``repro.launch.sessions``."""
+    admission/eviction scheduler lives in ``repro.serving``."""
     return init_stream_state(plan, slots, x_calib=x_calib,
                              bn_stats=bn_stats, dtype=dtype)
+
+
+def _select_slots(keep_old, old: StreamState, new: StreamState) -> StreamState:
+    """Per-slot select between two StreamStates: slots where ``keep_old`` is
+    True keep ``old``'s per-slot leaves, all others take ``new``'s — the
+    traced masking behind :func:`step_frames`'s ``hold``.  The shared
+    plan-level ``bn_stats`` are taken from ``new`` (they are identical in
+    both states by construction)."""
+    keep_old = jnp.asarray(keep_old, bool)
+
+    def sel(o, n):
+        m = keep_old.reshape(keep_old.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, o, n)
+
+    blocks = [{k: sel(ob[k], nb[k]) for k in nb}
+              for ob, nb in zip(old.blocks, new.blocks)]
+    rfc = None
+    if new.rfc is not None:
+        rfc = [{k: sel(orr[k], nr[k]) for k in nr}
+               for orr, nr in zip(old.rfc, new.rfc)]
+    return StreamState(
+        t_raw=sel(old.t_raw, new.t_raw), blocks=blocks,
+        pool_ring=(sel(old.pool_ring, new.pool_ring)
+                   if new.pool_ring is not None else None),
+        pool_sum=sel(old.pool_sum, new.pool_sum),
+        pool_t=sel(old.pool_t, new.pool_t),
+        bn_stats=new.bn_stats, rfc=rfc)
 
 
 def reset_slots(state: StreamState, free) -> StreamState:
@@ -813,6 +840,18 @@ def stream_first_logit_delay(plan: ExecutionPlan) -> int:
     for bs in reversed(ps.blocks):
         o = o * bs.stride + pad
     return o * ps.input_skip + 1
+
+
+def _pooled_logits(arrays, ps: PlanStatic, pool_sum, pool_t) -> jnp.ndarray:
+    """Running prediction from the temporal logit pool: mean over the
+    effective pooled-frame count (clamped to the sliding window when
+    ``stream_pool`` > 0, and to 1 before the first contribution), through
+    the fc head.  Shared by the streaming step and the hold path so the
+    two can never desynchronize."""
+    n_eff = (jnp.minimum(pool_t, ps.stream_pool) if ps.stream_pool > 0
+             else pool_t)
+    pooled = pool_sum / jnp.maximum(n_eff, 1)[:, None].astype(pool_sum.dtype)
+    return pooled @ arrays["fc_w"] + arrays["fc_b"]
 
 
 def _stem_frame(arrays, frame: jnp.ndarray, bn) -> jnp.ndarray:
@@ -948,14 +987,11 @@ def step_frame(
         # would accumulate rounding drift over an unbounded live stream
         pool_sum = pool_ring.sum(axis=1)
         pool_t = state.pool_t + take.astype(jnp.int32)
-        n_eff = jnp.minimum(pool_t, W)
     else:
         pool_ring = None
         pool_sum = state.pool_sum + jnp.where(take[:, None], contrib, 0.0)
         pool_t = state.pool_t + take.astype(jnp.int32)
-        n_eff = pool_t
-    pooled = pool_sum / jnp.maximum(n_eff, 1)[:, None].astype(pool_sum.dtype)
-    logits = pooled @ plan.arrays["fc_w"] + plan.arrays["fc_b"]
+    logits = _pooled_logits(plan.arrays, ps, pool_sum, pool_t)
     logits = constrain(logits, "batch", None)
 
     new_state = StreamState(
@@ -971,6 +1007,7 @@ def step_frames(
     frames: jnp.ndarray,             # (S, V, C) one raw frame per slot
     valid,                           # (S,) bool — per-slot clip/flush phase
     reset=None,                      # optional (S,) bool — admission reset
+    hold=None,                       # optional (S,) bool — freeze the slot
 ) -> Tuple[StreamState, jnp.ndarray]:
     """One scheduler tick of the session slab; returns (slab, logits[S]).
 
@@ -979,11 +1016,28 @@ def step_frames(
     a clean ring), then every slot advances one raw frame with its own
     ``valid`` bit — active sessions feed real frames (True), draining
     sessions feed the zero-padding flush (False), and free slots are dead
-    weight masked by the same validity machinery.  Everything is traced
-    masking over the compiled :func:`step_frame`, so the jitted tick is
-    compiled once per ExecutionPlan regardless of admissions, evictions or
-    occupancy.  Logits row s is slot s's running prediction; the host-side
-    scheduler (``repro.launch.sessions``) reads it at eviction time."""
+    weight masked by the same validity machinery.  ``hold`` freezes the
+    marked slots entirely: their per-slot state is untouched (no clock
+    advance, no ring write — *not* the flush path, which would inject
+    zero padding mid-stream) and their logits row is the previous running
+    prediction.  This is how an open-ended session (``GcnService.submit``)
+    starves gracefully when its frame buffer is empty but the stream has
+    not been closed.  Everything is traced masking over the compiled
+    :func:`step_frame`, so the jitted tick is compiled once per
+    ExecutionPlan regardless of admissions, evictions, holds or occupancy.
+    Logits row s is slot s's running prediction; the host-side scheduler
+    (``repro.serving``) reads it at eviction time."""
     if reset is not None:
         slab = reset_slots(slab, reset)
-    return step_frame(plan, slab, frames, valid)
+    new, logits = step_frame(plan, slab, frames, valid)
+    if hold is not None:
+        from repro.distributed.sharding import constrain
+
+        new = _select_slots(hold, slab, new)
+        # recompute the logits from the selected pool: held slots report
+        # their previous running prediction, all others are unchanged
+        # (re-constrained to the slot axis like the hold=None path)
+        logits = _pooled_logits(plan.arrays, plan.static, new.pool_sum,
+                                new.pool_t)
+        logits = constrain(logits, "batch", None)
+    return new, logits

@@ -1,44 +1,45 @@
-"""Serving driver.
+"""Serving driver — subcommand CLI over the serving stack.
 
-LM families: batched prefill + decode with the KV cache, greedy or top-k
-sampling.  Runs reduced configs on CPU; the same step functions are what
-the decode_32k / long_500k dry-run cells lower at production shapes.
+    PYTHONPATH=src python -m repro.launch.serve <mode> --arch ... [flags]
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-        --batch 4 --prompt-len 16 --gen 32
+Modes:
 
-GCN family: batched clip inference through the execution engine — the
-ExecutionPlans for both streams are compiled once per backend, then a
-jitted two-stream ensemble step drains clip batches and reports clips/s
-for every requested backend (reference and pallas by default).
+  clip      — GCN batched two-stream clip inference through the execution
+              engine (one ExecutionPlan per stream per backend, jitted
+              ensemble step, clips/s per backend):
 
-    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced
+                  serve clip --arch agcn-2s --reduced [--backend both]
 
-``--stream`` switches the GCN family to per-frame continual inference:
-one jitted ``step_frame`` per backend consumes raw skeleton frames against
-a StreamState (ring buffers + running logit pool) and reports frames/s and
-per-frame latency, plus top-1 agreement with the clip engine post-drain.
+  stream    — GCN per-frame continual inference: one jitted ``step_frame``
+              per backend consumes raw skeleton frames against a
+              StreamState and reports frames/s, per-frame latency and
+              post-drain clip-engine agreement:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced --stream
+                  serve stream --arch agcn-2s --reduced
 
-``--sessions S`` serves *multi-session* live traffic: a fixed-capacity
-S-slot session slab (one jitted ``step_frames`` tick for all slots) driven
-by the host-side SlabScheduler — Poisson session arrivals, admission into
-free slots, flush-drain eviction with per-session logits.  Reports
-aggregate frames/s, per-session latency p50/p99, slot occupancy and
-admission-to-first-logit delay, and merges rows into
-``BENCH_sessions.json``.  ``--qos fifo|preempt|deadline`` selects the
-scheduler policy (``preempt`` snapshot-evicts low-priority sessions for
-queued high-priority ones via ``engine.snapshot_slots``/``restore_slots``;
-``deadline`` drops expired sessions), ``--preempt-ratio`` the
-high-priority traffic mix.
+  sessions  — multi-session live traffic through a
+              :class:`repro.serving.GcnService`: Poisson (or bursty)
+              arrivals, QoS policies (``--qos fifo|preempt|deadline``),
+              and **elastic slot capacity** (``--capacity-tiers 2,4,8``:
+              one pre-built slab per tier, hysteresis grow/shrink,
+              session migration via snapshot/restore).  Merges rows into
+              ``BENCH_sessions.json``:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch agcn-2s --reduced \
-        --sessions 4 [--qos preempt --preempt-ratio 0.25]
-"""
+                  serve sessions --arch agcn-2s --reduced --slots 4 \\
+                      [--qos preempt] [--capacity-tiers 2,4,8 --load burst]
+
+  lm        — LM families: batched prefill + decode with the KV cache:
+
+                  serve lm --arch smollm-360m --reduced --prompt-len 16 --gen 32
+
+``--batch 0`` (the default everywhere) resolves through
+``ModelConfig.serve_batch`` — the one place family/mode defaults live.
+The pre-PR-5 flag spelling (``serve --arch ... [--stream|--sessions S]``)
+still parses, with a deprecation note."""
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -168,38 +169,41 @@ def serve_gcn_stream(arch: str, *, reduced: bool = True, batch: int = 4,
     return results
 
 
-def serve_gcn_sessions(arch: str, *, reduced: bool = True, sessions: int = 4,
+def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                        n_sessions: int = 0, rate: float = 0.0, seed: int = 0,
                        backends=("reference", "pallas"), qos: str = "fifo",
-                       preempt_ratio: float = 0.25, deadline_slack: int = 25):
-    """Multi-session stream serving: Poisson traffic through a session slab.
+                       preempt_ratio: float = 0.25, deadline_slack: int = 25,
+                       capacity_tiers=None, load: str = "poisson"):
+    """Multi-session stream serving through :class:`repro.serving.GcnService`.
 
-    One ``sessions``-slot slab per backend (two-stream ensemble), driven by
-    ``repro.launch.sessions.SlabScheduler`` under the ``qos`` policy
+    One service per backend (two-stream ensemble) under the ``qos`` policy
     (``fifo`` run-to-completion, ``preempt`` priority snapshot-eviction,
-    ``deadline`` expiry drops) — see that module for the slab/scheduler
-    split.  ``preempt_ratio`` sets the high-priority traffic mix (every
-    policy; same seed draws the same labels, so a fifo run is the preempt
-    run's baseline).  Returns the per-backend metrics dicts from
-    :func:`repro.launch.sessions.run_sessions` (aggregate frames/s,
-    per-priority latency p50/p99, busy + time-weighted occupancy,
-    preemption/restore counts, deadline-miss rate)."""
-    from repro.launch import sessions as sess
+    ``deadline`` expiry drops).  ``capacity_tiers`` (e.g. ``(2, 4, 8)``)
+    makes the service **elastic**: one pre-built slab per tier, hysteresis
+    grow/shrink on queue depth + occupancy, and active-session migration
+    across tiers via the engine's snapshot/restore; ``slots`` alone is a
+    fixed-capacity run.  ``load`` picks the arrival process (``poisson``
+    steady vs ``burst`` peaks-and-lulls — the elastic stress shape).
+    Returns the per-backend metrics dicts from
+    :func:`repro.serving.run_sessions` and merges them into
+    ``BENCH_sessions.json``."""
+    from repro.serving import run_sessions, write_bench
 
     cfg = get_config(arch, reduced=reduced)
     assert cfg.family == "gcn", f"{arch} is not a gcn-family arch"
-    n = n_sessions or 3 * sessions
+    n = n_sessions or 3 * slots
     # default mean inter-arrival ~ clip_len / slots keeps the slab busy
     # without unbounded queueing (offered load ≈ capacity)
-    mean_gap = rate if rate > 0 else max(2.0, cfg.gcn_frames / sessions)
+    mean_gap = rate if rate > 0 else max(2.0, cfg.gcn_frames / slots)
     results = []
     for backend in backends:
-        r = sess.run_sessions(cfg, slots=sessions, n_sessions=n,
-                              mean_interarrival=mean_gap, backend=backend,
-                              seed=seed, qos=qos, preempt_ratio=preempt_ratio,
-                              deadline_slack=deadline_slack)
+        r = run_sessions(cfg, slots=slots, n_sessions=n,
+                         mean_interarrival=mean_gap, backend=backend,
+                         seed=seed, qos=qos, preempt_ratio=preempt_ratio,
+                         deadline_slack=deadline_slack,
+                         capacity_tiers=capacity_tiers, load=load)
         results.append(r)
-    sess.write_bench(results)
+    write_bench(results)
     return results
 
 
@@ -208,7 +212,8 @@ def generate(arch: str, *, reduced: bool = True, batch: int = 4,
              greedy: bool = True, temperature: float = 1.0):
     cfg = get_config(arch, reduced=reduced)
     if cfg.family == "gcn":
-        raise ValueError("gcn family serving goes through serve_gcn()")
+        raise ValueError(f"{arch} is a gcn-family arch — use "
+                         "`serve clip|stream|sessions`, not `serve lm`")
     key = jax.random.PRNGKey(seed)
     params = registry.init_params(cfg, key)
     max_len = prompt_len + gen
@@ -242,93 +247,220 @@ def generate(arch: str, *, reduced: bool = True, batch: int = 4,
     return seqs, tps
 
 
-def main():
-    from repro.core.agcn.engine import BACKENDS
-    from repro.launch.sessions import QOS_POLICIES
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
 
-    ap = argparse.ArgumentParser()
+SUBCOMMANDS = ("clip", "stream", "sessions", "lm")
+
+
+def _parse_tiers(spec: str):
+    """``"2,4,8"`` -> (2, 4, 8); empty/None -> None (fixed capacity)."""
+    if not spec:
+        return None
+    return tuple(int(t) for t in spec.split(","))
+
+
+def _add_common(ap: argparse.ArgumentParser) -> None:
+    from repro.core.agcn.engine import BACKENDS
+
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=0)   # 0 -> family default
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--clips", type=int, default=64,
-                    help="gcn: total clips to drain per backend")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="0 -> family/mode default "
+                         "(ModelConfig.serve_batch, the single source)")
     ap.add_argument("--backend", default="both", choices=(*BACKENDS, "both"),
                     help="gcn: engine backend(s) to serve with")
-    ap.add_argument("--stream", action="store_true",
-                    help="gcn: per-frame continual inference (frames/s + "
-                         "per-frame latency) instead of batched clips")
-    ap.add_argument("--sessions", type=int, default=0,
-                    help="gcn: serve Poisson multi-session traffic through "
-                         "an S-slot session slab (writes BENCH_sessions.json)")
-    ap.add_argument("--n-sessions", type=int, default=0,
-                    help="gcn: total sessions to serve (default 3×slots)")
-    ap.add_argument("--qos", default="fifo", choices=QOS_POLICIES,
-                    help="gcn sessions: scheduler policy — fifo "
-                         "run-to-completion, preempt (priority snapshot-"
-                         "eviction), deadline (expiry drops)")
-    ap.add_argument("--preempt-ratio", type=float, default=0.25,
-                    help="gcn sessions: fraction of high-priority sessions "
-                         "in the generated load (every policy — a fifo run "
-                         "with the same seed baselines a preempt run)")
-    ap.add_argument("--deadline-slack", type=int, default=25,
-                    help="gcn sessions: extra ticks past each session's "
-                         "minimal service time before its deadline")
-    args = ap.parse_args()
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The subcommand CLI: ``serve clip|stream|sessions|lm [flags]``."""
+    from repro.serving import QOS_POLICIES
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    p = sub.add_parser("clip", help="gcn: batched two-stream clip inference")
+    _add_common(p)
+    p.add_argument("--clips", type=int, default=64,
+                   help="total clips to drain per backend")
+
+    p = sub.add_parser("stream", help="gcn: per-frame continual inference")
+    _add_common(p)
+
+    p = sub.add_parser("sessions",
+                       help="gcn: multi-session traffic through GcnService")
+    _add_common(p)
+    p.add_argument("--slots", type=int, default=4,
+                   help="slot capacity of a fixed run (with "
+                        "--capacity-tiers the capacity comes from the "
+                        "tiers instead, but --slots still sets the load "
+                        "defaults: --n-sessions 3×slots, --rate "
+                        "clip_len/slots)")
+    p.add_argument("--n-sessions", type=int, default=0,
+                   help="total sessions to serve (default 3×slots)")
+    p.add_argument("--rate", type=float, default=0.0,
+                   help="mean inter-arrival ticks (0 -> clip_len/slots)")
+    p.add_argument("--qos", default="fifo", choices=QOS_POLICIES,
+                   help="scheduler policy: fifo run-to-completion, preempt "
+                        "(priority snapshot-eviction), deadline (expiry "
+                        "drops)")
+    p.add_argument("--preempt-ratio", type=float, default=0.25,
+                   help="fraction of high-priority sessions in the "
+                        "generated load (every policy — a fifo run with "
+                        "the same seed baselines a preempt run)")
+    p.add_argument("--deadline-slack", type=int, default=25,
+                   help="extra ticks past each session's minimal service "
+                        "time before its deadline")
+    p.add_argument("--capacity-tiers", default="",
+                   help="comma-separated slot tiers, e.g. 2,4,8 — enables "
+                        "elastic capacity (pre-built slab per tier, "
+                        "hysteresis grow/shrink, snapshot/restore "
+                        "migration)")
+    p.add_argument("--load", default="poisson", choices=("poisson", "burst"),
+                   help="arrival process: steady poisson or bursty "
+                        "peaks-and-lulls (the elastic stress shape)")
+
+    p = sub.add_parser("lm", help="LM families: prefill + decode")
+    _add_common(p)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen", type=int, default=32)
+    return ap
+
+
+def _legacy_argv(argv):
+    """Map the pre-subcommand flag spelling onto the new CLI.
+
+    ``--sessions S`` -> ``sessions --slots S``, ``--stream`` ->
+    ``stream``, a gcn arch without either -> ``clip``, LM arches ->
+    ``lm``.  Prints a one-line deprecation note naming the new form."""
+    legacy = argparse.ArgumentParser(add_help=False)
+    legacy.add_argument("--arch", required=True)
+    legacy.add_argument("--reduced", action="store_true")
+    legacy.add_argument("--stream", action="store_true")
+    legacy.add_argument("--sessions", type=int, default=0)
+    known, _ = legacy.parse_known_args(argv)
+    cfg = get_config(known.arch, reduced=known.reduced)
+    out = list(argv)
+    if cfg.family != "gcn":
+        mode = "lm"
+    elif known.sessions:
+        mode = "sessions"
+        for i, a in enumerate(out):
+            if a == "--sessions":
+                out[i] = "--slots"
+                break
+            if a.startswith("--sessions="):
+                out[i] = "--slots=" + a.split("=", 1)[1]
+                break
+    elif known.stream:
+        mode = "stream"
+        out.remove("--stream")
+    else:
+        mode = "clip"
+    print(f"# note: flag-style invocation is deprecated — use "
+          f"`serve {mode} ...` (mapped automatically)", file=sys.stderr)
+    return [mode] + out
+
+
+def _print_sessions(results) -> None:
+    for r in results:
+        cap = (f" capacity={r['capacity']}" if r["capacity"] != "fixed"
+               else "")
+        print(f"backend={r['backend']} [sessions qos={r['qos']}{cap} "
+              f"load={r['load']}]: "
+              f"{r['sessions']} sessions over {r['slots']} slots, "
+              f"{r['frames_per_s']:.1f} frames/s aggregate, "
+              f"occupancy {r['occupancy']*100:.0f}% time-weighted "
+              f"({r['occupancy_busy']*100:.0f}% busy), "
+              f"session latency p50={r['latency_ms_p50']:.0f}ms "
+              f"p99={r['latency_ms_p99']:.0f}ms, "
+              f"first-logit p50={r['first_logit_ms_p50']:.0f}ms "
+              f"({r['first_logit_frames']} frames, "
+              f"{r['sessions_no_first_logit']} without), "
+              f"queue wait {r['queue_wait_ticks_mean']:.1f} ticks")
+        for p, pl in sorted(r["latency_ms_by_priority"].items()):
+            print(f"  priority {p}: n={pl['n']} "
+                  f"p50={pl['p50_ms']:.0f}ms p99={pl['p99_ms']:.0f}ms "
+                  f"(arrival→finish p50={pl['e2e_p50_ticks']:.0f} "
+                  f"p99={pl['e2e_p99_ticks']:.0f} ticks)")
+        if r["qos"] == "preempt":
+            print(f"  preemptions={r['preemptions']} "
+                  f"restores={r['restores']}")
+        if r["qos"] == "deadline":
+            print(f"  deadline missed={r['deadline_missed']} "
+                  f"(miss rate {r['deadline_miss_rate']*100:.0f}%)")
+        if r["capacity"] != "fixed":
+            print(f"  elastic: {r['migrations_grow']} grows / "
+                  f"{r['migrations_shrink']} shrinks, "
+                  f"migration {r['migration_ms_mean']:.1f}ms mean, "
+                  f"final capacity {r['capacity_final']}, "
+                  f"tier ticks {r['tier_ticks']}")
+    print("# merged BENCH_sessions.json")
+
+
+def main(argv=None):
+    """CLI entry: subcommand form, with the legacy flag form mapped."""
+    from repro.core.agcn.engine import BACKENDS
+
+    argv = list(sys.argv[1:] if argv is None else argv)
+    legacy = False
+    if not argv or argv[0] not in SUBCOMMANDS:
+        # the legacy flag spelling is recognized by its required --arch;
+        # map it first so `serve --arch ... --help` reaches the right
+        # subcommand's help instead of an 'invalid choice' error
+        if any(a == "--arch" or a.startswith("--arch=") for a in argv):
+            argv = _legacy_argv(argv)
+            legacy = True
+        else:
+            build_parser().parse_args(argv or ["-h"])
+            return
+    if legacy:
+        # the old single parser accepted every flag in every mode (extras
+        # were ignored); keep that contract for mapped invocations
+        args, extra = build_parser().parse_known_args(argv)
+        if extra:
+            print(f"# note: ignoring legacy flags not used by "
+                  f"`serve {argv[0]}`: {' '.join(extra)}", file=sys.stderr)
+    else:
+        args = build_parser().parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
-    if cfg.family == "gcn":
-        backends = BACKENDS if args.backend == "both" else (args.backend,)
-        if args.sessions:
-            results = serve_gcn_sessions(
-                args.arch, reduced=args.reduced, sessions=args.sessions,
-                n_sessions=args.n_sessions, backends=backends, qos=args.qos,
-                preempt_ratio=args.preempt_ratio,
-                deadline_slack=args.deadline_slack)
-            for r in results:
-                print(f"backend={r['backend']} [sessions qos={r['qos']}]: "
-                      f"{r['sessions']} sessions over {r['slots']} slots, "
-                      f"{r['frames_per_s']:.1f} frames/s aggregate, "
-                      f"occupancy {r['occupancy']*100:.0f}% time-weighted "
-                      f"({r['occupancy_busy']*100:.0f}% busy), "
-                      f"session latency p50={r['latency_ms_p50']:.0f}ms "
-                      f"p99={r['latency_ms_p99']:.0f}ms, "
-                      f"first-logit p50={r['first_logit_ms_p50']:.0f}ms "
-                      f"({r['first_logit_frames']} frames, "
-                      f"{r['sessions_no_first_logit']} without), "
-                      f"queue wait {r['queue_wait_ticks_mean']:.1f} ticks")
-                for p, pl in sorted(r["latency_ms_by_priority"].items()):
-                    print(f"  priority {p}: n={pl['n']} "
-                          f"p50={pl['p50_ms']:.0f}ms p99={pl['p99_ms']:.0f}ms "
-                          f"(arrival→finish p50={pl['e2e_p50_ticks']:.0f} "
-                          f"p99={pl['e2e_p99_ticks']:.0f} ticks)")
-                if r["qos"] == "preempt":
-                    print(f"  preemptions={r['preemptions']} "
-                          f"restores={r['restores']}")
-                if r["qos"] == "deadline":
-                    print(f"  deadline missed={r['deadline_missed']} "
-                          f"(miss rate {r['deadline_miss_rate']*100:.0f}%)")
-            print("# merged BENCH_sessions.json")
-            return
-        if args.stream:
-            res = serve_gcn_stream(args.arch, reduced=args.reduced,
-                                   batch=args.batch or 4, backends=backends)
-            for name, r in res.items():
-                print(f"backend={name} [stream]: "
-                      f"{r['frames_per_s']:.1f} frames/s "
-                      f"({args.batch or 4} streams), per-frame latency "
-                      f"p50={r['latency_ms_p50']:.2f}ms "
-                      f"mean={r['latency_ms_mean']:.2f}ms, "
-                      f"clip-engine top-1 agreement "
-                      f"{r['clip_agreement']*100:.1f}%")
-            if len(res) == 2:
-                a, b = (res[k]["top1"] for k in ("reference", "pallas"))
-                print("backend top-1 agreement: "
-                      f"{float((a == b).mean())*100:.1f}%")
-            return
+    backends = BACKENDS if args.backend == "both" else (args.backend,)
+
+    if args.mode == "sessions":
+        assert cfg.family == "gcn", f"{args.arch} is not a gcn-family arch"
+        results = serve_gcn_sessions(
+            args.arch, reduced=args.reduced, slots=args.slots,
+            n_sessions=args.n_sessions, rate=args.rate, backends=backends,
+            qos=args.qos, preempt_ratio=args.preempt_ratio,
+            deadline_slack=args.deadline_slack,
+            capacity_tiers=_parse_tiers(args.capacity_tiers),
+            load=args.load)
+        _print_sessions(results)
+        return
+    if args.mode == "stream":
+        assert cfg.family == "gcn", f"{args.arch} is not a gcn-family arch"
+        batch = cfg.serve_batch("stream", args.batch)
+        res = serve_gcn_stream(args.arch, reduced=args.reduced,
+                               batch=batch, backends=backends)
+        for name, r in res.items():
+            print(f"backend={name} [stream]: "
+                  f"{r['frames_per_s']:.1f} frames/s "
+                  f"({batch} streams), per-frame latency "
+                  f"p50={r['latency_ms_p50']:.2f}ms "
+                  f"mean={r['latency_ms_mean']:.2f}ms, "
+                  f"clip-engine top-1 agreement "
+                  f"{r['clip_agreement']*100:.1f}%")
+        if len(res) == 2:
+            a, b = (res[k]["top1"] for k in ("reference", "pallas"))
+            print("backend top-1 agreement: "
+                  f"{float((a == b).mean())*100:.1f}%")
+        return
+    if args.mode == "clip":
+        assert cfg.family == "gcn", f"{args.arch} is not a gcn-family arch"
         res = serve_gcn(args.arch, reduced=args.reduced,
-                        batch=args.batch or 8, clips=args.clips,
-                        backends=backends)
+                        batch=cfg.serve_batch("clip", args.batch),
+                        clips=args.clips, backends=backends)
         for name, r in res.items():
             print(f"backend={name}: {r['clips_per_s']:.1f} clips/s "
                   f"({len(r['top1'])} clips, 2-stream ensemble)")
@@ -338,7 +470,7 @@ def main():
             print(f"backend top-1 agreement: {agree*100:.1f}%")
         return
     seqs, tps = generate(args.arch, reduced=args.reduced,
-                         batch=args.batch or 4,
+                         batch=cfg.serve_batch("lm", args.batch),
                          prompt_len=args.prompt_len, gen=args.gen)
     print(f"generated {seqs.shape} tokens at {tps:.1f} tok/s")
     print("sample:", seqs[0, : args.prompt_len + 8].tolist())

@@ -1,632 +1,48 @@
-"""Multi-session stream serving: a session-slab scheduler over the engine's
-per-frame step, with session QoS (priority admission, snapshot-preemption,
-deadline eviction).
+"""Deprecated shim — the session stack moved to :mod:`repro.serving`.
 
-The streaming engine (PR 2) serves *one* lockstep batch of streams; live
-traffic is many independent skeleton sessions arriving and ending at
-different times — the continual-inference regime of CoST-GCN (Hedegaard et
-al., 2022) at the throughput target of the ROADMAP.  This module is the
-host-side half of that service:
+The PR-3/PR-4 serving surface (``SlabScheduler``, ``AdmissionQueue``,
+``TickPlan``, ``run_sessions``, the load generators and the BENCH row
+merge) now lives behind the :class:`repro.serving.GcnService` facade:
 
-  device  — a fixed-capacity **session slab**: one ``engine.StreamState``
-            whose leading axis is S slots, advanced by one jitted
-            ``engine.step_frames(plan, slab, frames[S], valid[S], reset[S])``
-            per tick (compiled once per ExecutionPlan, any occupancy).
-            Preemption is the engine's ``snapshot_slots`` (one traced
-            gather over every per-slot leaf) and resume is
-            ``restore_slots`` (the inverse scatter).
-  host    — :class:`SlabScheduler`: a slot table + priority admission
-            queue (:class:`AdmissionQueue`, strict (priority, arrival)
-            order) with a pluggable QoS policy:
+    from repro.serving import GcnService, run_sessions, SlabScheduler
 
-              fifo     — run-to-completion (the default; with uniform
-                         priorities this is exactly FIFO admission).
-              preempt  — a queued strictly-higher-priority session may
-                         snapshot-evict the lowest-priority active slot;
-                         the victim re-queues (keeping its progress and
-                         device snapshot) and later restores into a free
-                         slot and resumes.
-              deadline — sessions whose completion deadline has passed
-                         are dropped from the queue or evicted from their
-                         slot and counted as ``missed``.
-
-The scheduler is pure host bookkeeping (numpy in, numpy out) so it unit-
-tests without jax — device snapshots never enter it; :meth:`tick_inputs`
-returns a :class:`TickPlan` naming which slots to snapshot/restore and the
-driver (:func:`run_sessions`) holds the captures.  :func:`run_sessions`
-couples it to the jitted two-stream slab step and measures the serving
-metrics the ROADMAP asks for: aggregate frames/s, per-session (and
-per-priority-class) completion latency p50/p99, busy and time-weighted
-slot occupancy, admission-to-first-logit delay, preemption/restore counts
-and the deadline-miss rate.
-"""
+Every public name this module used to define resolves lazily from
+``repro.serving`` with a :class:`DeprecationWarning`; new code should
+import from ``repro.serving`` directly.  This shim will be removed once
+no caller hits the warning."""
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import json
-import os
-import time
-from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-DEFAULT_BENCH_PATH = "BENCH_sessions.json"
-
-QOS_POLICIES = ("fifo", "preempt", "deadline")
-
-
-# ---------------------------------------------------------------------------
-# load generation
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class SessionRequest:
-    """One incoming stream session: a skeleton clip arriving at a tick.
-
-    ``priority`` orders admission (larger = more urgent; ties are FIFO by
-    arrival) and selects preemption victims under the ``preempt`` policy;
-    ``deadline`` is the absolute tick by which the session must *complete*
-    under the ``deadline`` policy (None = no deadline)."""
-
-    sid: int
-    arrival: int             # tick index at which the session arrives
-    clip: np.ndarray         # (T, V, C) raw skeleton frames
-    priority: int = 0
-    deadline: Optional[int] = None
-
-
-@dataclasses.dataclass
-class SessionRecord:
-    """A completed session: identity, timing, QoS history, final logits."""
-
-    sid: int
-    frames: int              # clip length T (real frames)
-    arrival: int             # tick of arrival (queue entry)
-    admitted: int            # tick of first slot admission
-    finished: int            # tick the drained logits were captured
-    wall_admitted: float     # monotonic seconds
-    wall_first_logit: float  # first *valid* logit contribution for this slot
-                             # (-1.0 sentinel: the session never produced one)
-    wall_finished: float
-    logits: np.ndarray       # (num_classes,) post-drain prediction
-    priority: int = 0
-    preemptions: int = 0     # times this session was snapshot-evicted
-
-
-def poisson_arrivals(
-    n_sessions: int,
-    mean_interarrival: float,
-    lengths: Sequence[int],
-    joints: int,
-    channels: int,
-    seed: int = 0,
-    clip_source: Optional[Callable[[int, int], np.ndarray]] = None,
-    priorities: Optional[Sequence[int]] = None,
-    high_priority_ratio: float = 0.0,
-) -> List[SessionRequest]:
-    """Poisson-process session arrivals (exponential inter-arrival ticks).
-
-    Each session draws a clip length uniformly from ``lengths`` and clip
-    content from ``clip_source(sid, T) -> (T, V, C)`` (standard-normal
-    synthetic skeletons by default — the serving driver swaps in the data
-    pipeline).  The priority mix is either explicit (``priorities``, one
-    int per session) or a Bernoulli draw: ``high_priority_ratio`` of the
-    sessions get priority 1, the rest priority 0.  Returns requests sorted
-    by arrival tick."""
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(mean_interarrival, size=n_sessions)
-    arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(int)
-    if priorities is None:
-        priorities = (rng.random(n_sessions)
-                      < high_priority_ratio).astype(int)
-    reqs = []
-    for sid, at in enumerate(arrivals):
-        T = int(rng.choice(np.asarray(lengths)))
-        if clip_source is not None:
-            clip = np.asarray(clip_source(sid, T), np.float32)
-        else:
-            clip = rng.standard_normal((T, joints, channels)).astype(np.float32)
-        reqs.append(SessionRequest(sid=sid, arrival=int(at), clip=clip,
-                                   priority=int(priorities[sid])))
-    return reqs
-
-
-# ---------------------------------------------------------------------------
-# the scheduler
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class _Slot:
-    """Host-side view of one slab slot holding an admitted session.
-
-    A preempted session is re-queued as this same object (progress,
-    first-logit latch and preemption count travel with it), which is also
-    how re-admission knows to restore its device snapshot rather than
-    reset the slot."""
-
-    req: SessionRequest
-    admitted: int            # first admission tick
-    rel: int                 # raw frames fed so far (clip + flush)
-    total: int               # clip length + flush drain
-    wall_admitted: float
-    wall_first_logit: float = -1.0
-    preemptions: int = 0
-
-
-class AdmissionQueue:
-    """Priority admission queue: strict (priority desc, arrival, seq) order.
-
-    With uniform priorities the (arrival, seq) tie-break makes this exactly
-    a FIFO — today's behavior is the degenerate case, not a second code
-    path.  Items are fresh :class:`SessionRequest`\\ s or preempted
-    :class:`_Slot`\\ s awaiting re-admission (both carry the same ordering
-    key through their request)."""
-
-    def __init__(self):
-        self._heap: List[Tuple[int, int, int, Any]] = []
-        self._seq = 0
-
-    @staticmethod
-    def _req(item) -> SessionRequest:
-        return item.req if isinstance(item, _Slot) else item
-
-    def push(self, item) -> None:
-        """Queue a session (or a preempted slot) by (priority, arrival)."""
-        r = self._req(item)
-        heapq.heappush(self._heap, (-r.priority, r.arrival, self._seq, item))
-        self._seq += 1
-
-    def pop(self):
-        """Remove and return the highest-priority (then earliest) item."""
-        return heapq.heappop(self._heap)[-1]
-
-    def peek_priority(self) -> int:
-        """Priority of the head item (the next admission)."""
-        return -self._heap[0][0]
-
-    def drop_if(self, pred: Callable[[Any], bool]) -> List[Any]:
-        """Remove and return every queued item for which ``pred`` holds
-        (deadline expiry sweep); the queue keeps its heap order."""
-        kept, dropped = [], []
-        for entry in self._heap:
-            (dropped if pred(entry[-1]) else kept).append(entry)
-        if dropped:
-            self._heap = kept
-            heapq.heapify(self._heap)
-        return [e[-1] for e in dropped]
-
-    def __len__(self) -> int:
-        return len(self._heap)
-
-    def __bool__(self) -> bool:
-        return bool(self._heap)
-
-
-@dataclasses.dataclass
-class TickPlan:
-    """One tick's device work order, built by ``SlabScheduler.tick_inputs``.
-
-    ``frames``/``valid``/``reset`` feed ``engine.step_frames`` unchanged
-    (the class iterates as that triple for drivers that ignore QoS).
-    ``snapshot`` lists (slot, sid) pairs the driver must capture with
-    ``engine.snapshot_slots`` *before* the step (preemption evictions);
-    ``restore`` lists (slot, sid) pairs whose stored snapshot must be
-    scattered back with ``engine.restore_slots`` before the step."""
-
-    frames: np.ndarray
-    valid: np.ndarray
-    reset: np.ndarray
-    snapshot: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
-    restore: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
-
-    def __iter__(self):
-        """Back-compat unpacking: ``frames, valid, reset = tick_inputs()``."""
-        return iter((self.frames, self.valid, self.reset))
-
-
-class SlabScheduler:
-    """Slot table + priority admission queue driving ``engine.step_frames``.
-
-    Pure host logic over numpy arrays: each tick, :meth:`tick_inputs`
-    applies the QoS policy (deadline sweep, admissions, preemptions) and
-    builds the :class:`TickPlan` the jitted slab step consumes, and
-    :meth:`tick_outputs` consumes the step's logits — finalising any
-    session whose flush drain completed this tick and recycling its slot.
-
-    Timing is delegated to two plan-derived callables so the scheduler
-    itself stays jax-free: ``flush_frames(T)`` (the per-block 'same'-padding
-    drain after a T-frame clip, ``engine.stream_flush_frames``) and
-    ``first_logit_delay`` (raw frames from admission to the first valid
-    logit, ``engine.stream_first_logit_delay``).  Device snapshots never
-    enter the scheduler either: preemption/restore are *named* in the
-    TickPlan and executed by the driver."""
-
-    def __init__(self, slots: int, joints: int, channels: int,
-                 flush_frames: Callable[[int], int],
-                 first_logit_delay: int,
-                 policy: str = "fifo"):
-        if policy not in QOS_POLICIES:
-            raise ValueError(
-                f"unknown QoS policy {policy!r} (expected one of "
-                f"{QOS_POLICIES})")
-        self.slots: List[Optional[_Slot]] = [None] * slots
-        self.joints, self.channels = joints, channels
-        self.flush_frames = flush_frames
-        self.first_logit_delay = first_logit_delay
-        self.policy = policy
-        self.queue = AdmissionQueue()
-        self.completed: List[SessionRecord] = []
-        self.missed: List[SessionRequest] = []   # deadline-policy casualties
-        self.occupancy_samples: List[float] = []
-        self.valid_frames = 0        # real (clip) frames fed across all slots
-        self.preemptions = 0         # snapshot-evictions performed
-        self.restores = 0            # preempted sessions re-admitted
-
-    # -- admission -----------------------------------------------------------
-
-    def submit(self, req: SessionRequest) -> None:
-        """Queue an arrived session (strict (priority, arrival) order —
-        plain FIFO when every priority is equal)."""
-        self.queue.push(req)
-
-    def busy(self) -> int:
-        """Occupied slot count (active + draining)."""
-        return sum(s is not None for s in self.slots)
-
-    def idle(self) -> bool:
-        """True when no session is queued or occupying a slot."""
-        return not self.queue and self.busy() == 0
-
-    # -- policy helpers ------------------------------------------------------
-
-    def _expired(self, item, tick: int) -> bool:
-        r = AdmissionQueue._req(item)
-        return r.deadline is not None and tick > r.deadline
-
-    def _miss(self, item, tick: int) -> None:
-        r = AdmissionQueue._req(item)
-        self.missed.append(r)
-
-    def _admit(self, s: int, item, tick: int, now: float,
-               reset: np.ndarray, restore: List[Tuple[int, int]]) -> None:
-        """Place a queue item into free slot ``s``: fresh sessions get a
-        traced reset, preempted sessions get a snapshot restore."""
-        if isinstance(item, _Slot):                  # resume a preemption
-            self.slots[s] = item
-            restore.append((s, item.req.sid))
-            self.restores += 1
-        else:
-            self.slots[s] = _Slot(
-                req=item, admitted=tick, rel=0,
-                total=len(item.clip) + self.flush_frames(len(item.clip)),
-                wall_admitted=now)
-            reset[s] = True
-
-    # -- one tick ------------------------------------------------------------
-
-    def tick_inputs(self, tick: int, now: float) -> TickPlan:
-        """Apply the QoS policy, admit into free slots, build step inputs.
-
-        Returns a :class:`TickPlan` whose ``frames (S, V, C) f32``,
-        ``valid (S,) bool`` and ``reset (S,) bool`` feed the slab step
-        (reset marks this tick's fresh admissions — the traced slot
-        zeroing; valid marks slots feeding real clip frames, False = flush
-        drain or free slot — both take the zero-padding path), plus the
-        snapshot/restore slot lists the driver must execute around it."""
-        S = len(self.slots)
-        reset = np.zeros((S,), bool)
-        snapshot: List[Tuple[int, int]] = []
-        restore: List[Tuple[int, int]] = []
-
-        if self.policy == "deadline":
-            # queue sweep: expired sessions never reach a slot (only fresh
-            # requests can be queued here — preempted _Slots exist only
-            # under the mutually-exclusive preempt policy, so no stored
-            # snapshot can be orphaned by a drop)
-            for item in self.queue.drop_if(lambda it: self._expired(it, tick)):
-                self._miss(item, tick)
-            # slot sweep: evict sessions whose deadline passed mid-service
-            for s, slot in enumerate(self.slots):
-                if slot is not None and self._expired(slot, tick):
-                    self.slots[s] = None
-                    self._miss(slot, tick)
-
-        for s in range(S):
-            if self.slots[s] is None and self.queue:
-                self._admit(s, self.queue.pop(), tick, now, reset, restore)
-
-        if self.policy == "preempt":
-            # a queued strictly-higher-priority session snapshot-evicts the
-            # lowest-priority active slot (latest admission breaks ties —
-            # the session with the least sunk progress yields first)
-            while self.queue:
-                head_p = self.queue.peek_priority()
-                cands = [(slot.req.priority, -slot.admitted, s)
-                         for s, slot in enumerate(self.slots)
-                         if slot is not None]
-                if not cands:
-                    break
-                vp, _, vs = min(cands)
-                if vp >= head_p:
-                    break
-                victim = self.slots[vs]
-                snapshot.append((vs, victim.req.sid))
-                victim.preemptions += 1
-                self.preemptions += 1
-                self.slots[vs] = None
-                self.queue.push(victim)
-                self._admit(vs, self.queue.pop(), tick, now, reset, restore)
-
-        frames = np.zeros((S, self.joints, self.channels), np.float32)
-        valid = np.zeros((S,), bool)
-        for s, slot in enumerate(self.slots):
-            if slot is None:
-                continue
-            if slot.rel < len(slot.req.clip):
-                frames[s] = slot.req.clip[slot.rel]
-                valid[s] = True
-                self.valid_frames += 1
-        self.occupancy_samples.append(self.busy() / S)
-        return TickPlan(frames=frames, valid=valid, reset=reset,
-                        snapshot=snapshot, restore=restore)
-
-    def tick_outputs(self, tick: int, logits: np.ndarray, now: float
-                     ) -> List[SessionRecord]:
-        """Advance slot clocks with this tick's logits; evict drained slots.
-
-        ``logits`` is the slab step's (S, num_classes) output.  The first
-        tick a slot's clock reaches the first-logit delay latches the wall
-        time (a ``>=`` latch, set once — the session keeps it across
-        preemptions); a slot whose flush drain completed captures its
-        logits row as the session's final prediction, is freed, and the
-        finished :class:`SessionRecord` is returned (and appended to
-        ``self.completed``)."""
-        done: List[SessionRecord] = []
-        for s, slot in enumerate(self.slots):
-            if slot is None:
-                continue
-            if (slot.wall_first_logit < 0
-                    and slot.rel >= self.first_logit_delay - 1):
-                slot.wall_first_logit = now
-            if slot.rel == slot.total - 1:
-                rec = SessionRecord(
-                    sid=slot.req.sid, frames=len(slot.req.clip),
-                    arrival=slot.req.arrival, admitted=slot.admitted,
-                    finished=tick, wall_admitted=slot.wall_admitted,
-                    wall_first_logit=slot.wall_first_logit,
-                    wall_finished=now,
-                    logits=np.asarray(logits[s]),
-                    priority=slot.req.priority,
-                    preemptions=slot.preemptions)
-                done.append(rec)
-                self.completed.append(rec)
-                self.slots[s] = None
-            else:
-                slot.rel += 1
-        return done
-
-
-# ---------------------------------------------------------------------------
-# the serving loop
-# ---------------------------------------------------------------------------
-
-def run_sessions(
-    cfg,
-    *,
-    slots: int = 8,
-    n_sessions: int = 16,
-    mean_interarrival: float = 8.0,
-    lengths: Optional[Sequence[int]] = None,
-    backend: str = "reference",
-    quant: bool = True,
-    seed: int = 0,
-    max_ticks: int = 100_000,
-    qos: str = "fifo",
-    preempt_ratio: float = 0.25,
-    deadline_slack: int = 25,
-    priorities: Optional[Sequence[int]] = None,
-) -> Dict:
-    """Serve ``n_sessions`` Poisson-arriving skeleton sessions through an
-    ``slots``-slot slab with the two-stream (joint + bone) ensemble.
-
-    Compiles one ExecutionPlan per stream for ``backend``, calibrates the
-    shared frozen BN statistics once from a pipeline clip batch, then runs
-    the scheduler tick loop under the ``qos`` policy: one jitted
-    ``make_gcn_slab_step`` call per tick serves every slot (admissions via
-    the traced reset mask, drains via per-slot validity), and preemptions
-    execute the jitted ``engine.snapshot_slots`` / ``restore_slots`` pair
-    around it.  ``preempt_ratio`` sets the load generator's high-priority
-    mix (priority 1 vs 0) under every policy — same seed, same labels, so
-    a fifo run baselines the preempt run directly; under ``deadline``
-    each session's completion deadline is its minimal service time
-    (clip + flush) plus ``deadline_slack`` ticks past arrival.  Returns the
-    metrics dict (also the row merged into ``BENCH_sessions.json`` by
-    ``serve --sessions``) plus the completed :class:`SessionRecord` list
-    under ``"records"``."""
-    import jax
-    import jax.numpy as jnp
-
-    from repro.core.agcn import engine
-    from repro.core.agcn.model import bone_stream
-    from repro.core.pruning.plan import plan_from_config
-    from repro.data.pipeline import DataConfig, skeleton_batches
-    from repro.models import registry
-    from repro.train.steps import make_gcn_slab_step
-
-    prune_plan = plan_from_config(cfg)
-    kj, kb = jax.random.split(jax.random.PRNGKey(seed))
-    params_joint = registry.init_params(cfg, kj)
-    params_bone = registry.init_params(cfg, kb)
-    plans = tuple(
-        engine.build_execution_plan(p, cfg, prune_plan, quant=quant,
-                                    backend=backend)
-        for p in (params_joint, params_bone))
-
-    # calibration + load: clips come from the same synthetic NTU pipeline
-    dcfg = DataConfig(global_batch=max(4, slots), seq_len=cfg.gcn_frames,
-                      seed=seed)
-    calib = jnp.asarray(next(skeleton_batches(cfg, dcfg))["x"])
-    slabs = (
-        engine.init_session_slab(plans[0], slots, x_calib=calib),
-        engine.init_session_slab(plans[1], slots,
-                                 x_calib=bone_stream(calib)),
-    )
-
-    if lengths is None:
-        lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))
-    pool = np.asarray(next(skeleton_batches(
-        cfg, DataConfig(global_batch=n_sessions, seq_len=cfg.gcn_frames,
-                        seed=seed + 1)))["x"])
-
-    def clip_source(sid: int, T: int) -> np.ndarray:
-        return pool[sid % len(pool), :T]
-
-    # the priority mix applies under every policy (same seed -> identical
-    # labels), so a fifo run is the directly comparable baseline for the
-    # preempt run: priority admission without preemption
-    reqs = poisson_arrivals(
-        n_sessions, mean_interarrival, lengths,
-        cfg.gcn_joints, cfg.gcn_in_channels, seed=seed,
-        clip_source=clip_source, priorities=priorities,
-        high_priority_ratio=preempt_ratio)
-    flush = lambda T: engine.stream_flush_frames(plans[0], T)  # noqa: E731
-    if qos == "deadline":
-        for r in reqs:
-            r.deadline = (r.arrival + len(r.clip) + flush(len(r.clip))
-                          + deadline_slack)
-    sched = SlabScheduler(
-        slots, cfg.gcn_joints, cfg.gcn_in_channels,
-        flush_frames=flush,
-        first_logit_delay=engine.stream_first_logit_delay(plans[0]),
-        policy=qos)
-
-    step = jax.jit(make_gcn_slab_step(cfg))
-    snap_fn = jax.jit(engine.snapshot_slots)
-    rest_fn = jax.jit(engine.restore_slots)
-    # compile outside the timed loop (both reset variants trace identically
-    # — reset is a traced mask — so one warmup call suffices)
-    zf = jnp.zeros((slots, cfg.gcn_joints, cfg.gcn_in_channels))
-    zb = jnp.zeros((slots,), bool)
-    warm, wl = step(plans, slabs, zf, zb, zb)
-    jax.block_until_ready(wl)
-    if qos == "preempt":
-        w = tuple(snap_fn(s, jnp.asarray(0)) for s in slabs)
-        ws = tuple(rest_fn(s, jnp.asarray(0), x) for s, x in zip(slabs, w))
-        jax.block_until_ready(ws)
-
-    snaps: Dict[int, Tuple] = {}     # sid -> per-stream slot snapshots
-    pending = deque(reqs)
-    tick = 0
-    t0 = time.monotonic()
-    while tick < max_ticks:
-        while pending and pending[0].arrival <= tick:
-            sched.submit(pending.popleft())
-        if sched.idle():
-            if not pending:
-                break
-            tick = pending[0].arrival       # fast-forward empty gaps
-            continue
-        now = time.monotonic()
-        tp = sched.tick_inputs(tick, now)
-        for s, sid in tp.snapshot:          # capture before restore/step
-            snaps[sid] = tuple(snap_fn(slab, jnp.asarray(s))
-                               for slab in slabs)
-        for s, sid in tp.restore:
-            slabs = tuple(rest_fn(slab, jnp.asarray(s), sn)
-                          for slab, sn in zip(slabs, snaps.pop(sid)))
-        slabs, logits = step(plans, slabs, jnp.asarray(tp.frames),
-                             jnp.asarray(tp.valid), jnp.asarray(tp.reset))
-        logits_np = np.asarray(logits)      # blocks until the tick is done
-        sched.tick_outputs(tick, logits_np, time.monotonic())
-        tick += 1
-    wall = time.monotonic() - t0
-
-    recs = sched.completed
-    lat = np.asarray([r.wall_finished - r.wall_admitted for r in recs])
-    first = np.asarray([r.wall_first_logit - r.wall_admitted
-                        for r in recs if r.wall_first_logit >= 0])
-    no_first = sum(r.wall_first_logit < 0 for r in recs)
-    qwait = np.asarray([r.admitted - r.arrival for r in recs], np.float64)
-    # per-class latency, both anchors: service time (admission→finish, wall
-    # ms) and end-to-end (arrival→finish, scheduler ticks — queue wait and
-    # preemption requeues included, which is where the QoS policies differ;
-    # tick-denominated so the comparison is deterministic, not wall noise)
-    by_prio: Dict[str, Dict[str, float]] = {}
-    for p in sorted({r.priority for r in recs}):
-        pl = np.asarray([r.wall_finished - r.wall_admitted
-                         for r in recs if r.priority == p])
-        pt = np.asarray([r.finished - r.arrival
-                         for r in recs if r.priority == p], np.float64)
-        by_prio[str(p)] = {
-            "n": int(len(pl)),
-            "p50_ms": float(np.percentile(pl, 50) * 1e3),
-            "p99_ms": float(np.percentile(pl, 99) * 1e3),
-            "e2e_p50_ticks": float(np.percentile(pt, 50)),
-            "e2e_p99_ticks": float(np.percentile(pt, 99)),
-        }
-    n_missed = len(sched.missed)
-    # occupancy_samples are busy/S on *processed* ticks only; the true
-    # time-weighted occupancy counts fast-forwarded idle gaps as zero
-    # (tick spans the whole serving window, gaps included)
-    occ_busy = float(np.mean(sched.occupancy_samples)
-                     if sched.occupancy_samples else 0.0)
-    occ_time = float(np.sum(sched.occupancy_samples) / max(tick, 1))
-    return {
-        "backend": backend,
-        "slots": slots,
-        "qos": qos,
-        "sessions": len(recs),
-        "ticks": tick,
-        "wall_s": wall,
-        "frames_per_s": sched.valid_frames / wall if wall > 0 else 0.0,
-        "ticks_per_s": tick / wall if wall > 0 else 0.0,
-        "occupancy": occ_time,
-        "occupancy_busy": occ_busy,
-        "latency_ms_p50": float(np.percentile(lat, 50) * 1e3) if len(lat) else 0.0,
-        "latency_ms_p99": float(np.percentile(lat, 99) * 1e3) if len(lat) else 0.0,
-        "latency_ms_by_priority": by_prio,
-        "first_logit_ms_p50": (float(np.percentile(first, 50) * 1e3)
-                               if len(first) else 0.0),
-        "first_logit_frames": engine.stream_first_logit_delay(plans[0]),
-        "sessions_no_first_logit": int(no_first),
-        "queue_wait_ticks_mean": float(qwait.mean()) if len(qwait) else 0.0,
-        "preemptions": sched.preemptions,
-        "restores": sched.restores,
-        "deadline_missed": n_missed,
-        "deadline_miss_rate": (n_missed / (n_missed + len(recs))
-                               if (n_missed + len(recs)) else 0.0),
-        "records": recs,
-    }
-
-
-def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
-    """Merge the multi-session serving rows into ``BENCH_sessions.json``.
-
-    Rows are keyed by ``(backend, slots, qos)`` (rows written before the
-    QoS axis existed default to ``fifo``): an existing row with the same
-    key is replaced in place, every other row survives, and new keys are
-    appended — so ``serve --sessions --backend pallas`` refreshes only the
-    pallas rows instead of clobbering the reference rows the README tables
-    are rendered from (``tools/bench_tables.py``)."""
-    def key(r: Dict) -> Tuple:
-        return (r.get("backend"), r.get("slots"), r.get("qos", "fifo"))
-
-    existing: List[Dict] = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                existing = json.load(f)
-            if not isinstance(existing, list):
-                existing = []
-        except (json.JSONDecodeError, OSError):
-            existing = []
-    fresh = {key(r): {k: v for k, v in r.items() if k != "records"}
-             for r in results}
-    rows = []
-    for r in existing:
-        rows.append(fresh.pop(key(r), r))
-    rows.extend(fresh.values())
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+import warnings
+
+_MOVED = (
+    "AdmissionQueue",
+    "DEFAULT_BENCH_PATH",
+    "QOS_POLICIES",
+    "SessionRecord",
+    "SessionRequest",
+    "SlabScheduler",
+    "TickPlan",
+    "bench_key",
+    "bursty_arrivals",
+    "poisson_arrivals",
+    "run_sessions",
+    "write_bench",
+)
+
+
+def __getattr__(name: str):
+    """Lazily forward moved names to ``repro.serving`` (with a warning)."""
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.launch.sessions.{name} moved to repro.serving.{name}; "
+            "this shim will be removed in a future PR",
+            DeprecationWarning, stacklevel=2)
+        import repro.serving as serving
+        return getattr(serving, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    """Expose the forwarded surface to introspection."""
+    return sorted(_MOVED)

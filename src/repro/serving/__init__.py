@@ -1,0 +1,52 @@
+"""`repro.serving` — the multi-session GCN serving package.
+
+Public surface (snapshotted in ``docs/api_surface.txt`` and gated by
+``tools/check_api.py``):
+
+* :class:`GcnService` — the session-handle facade
+  (``open_session``/``submit``/``poll``/``close`` + ``tick``), owning the
+  compiled plans, the per-tier session slabs, QoS and elastic capacity.
+* :func:`run_sessions` — the batch driver (Poisson/bursty load through a
+  service; the ``serve sessions`` / BENCH row path).
+* :class:`SlabScheduler`, :class:`AdmissionQueue`, :class:`TickPlan`,
+  :class:`SessionRequest`, :class:`SessionRecord` — scheduling internals
+  (host-side, jax-free), importable for tests and custom drivers.
+* :class:`CapacityManager`, :class:`CapacityConfig` — the elastic-tier
+  decision logic.
+* :func:`poisson_arrivals`, :func:`bursty_arrivals` — load generators.
+* :func:`write_bench`, :func:`bench_key` — BENCH_sessions.json row merge.
+
+The legacy import path ``repro.launch.sessions`` is a deprecation shim
+over this package."""
+from repro.serving.capacity import (CapacityConfig, CapacityManager,
+                                    ResizeEvent)
+from repro.serving.scheduler import (DEFAULT_BENCH_PATH, QOS_POLICIES,
+                                     AdmissionQueue, SessionRecord,
+                                     SessionRequest, SlabScheduler,
+                                     TickPlan, bench_key, bursty_arrivals,
+                                     poisson_arrivals, write_bench)
+from repro.serving.service import (SESSION_STATES, GcnService,
+                                   SessionHandle, SessionStatus,
+                                   run_sessions)
+
+__all__ = [
+    "AdmissionQueue",
+    "CapacityConfig",
+    "CapacityManager",
+    "DEFAULT_BENCH_PATH",
+    "GcnService",
+    "QOS_POLICIES",
+    "ResizeEvent",
+    "SESSION_STATES",
+    "SessionHandle",
+    "SessionRecord",
+    "SessionRequest",
+    "SessionStatus",
+    "SlabScheduler",
+    "TickPlan",
+    "bench_key",
+    "bursty_arrivals",
+    "poisson_arrivals",
+    "run_sessions",
+    "write_bench",
+]

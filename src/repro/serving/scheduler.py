@@ -1,0 +1,621 @@
+"""Session-slab scheduling internals behind the :class:`GcnService` facade.
+
+This module is the host-side half of multi-session stream serving (moved
+here from ``repro.launch.sessions`` — that path is now a deprecation
+shim).  The streaming engine serves *one* lockstep batch of streams; live
+traffic is many independent skeleton sessions arriving and ending at
+different times — the continual-inference regime of CoST-GCN (Hedegaard et
+al., 2022) at the throughput target of the ROADMAP:
+
+  device  — a fixed-capacity **session slab**: one ``engine.StreamState``
+            whose leading axis is S slots, advanced by one jitted
+            ``engine.step_frames(plan, slab, frames[S], valid[S],
+            reset[S], hold[S])`` per tick (compiled once per
+            ExecutionPlan, any occupancy).  Preemption is the engine's
+            ``snapshot_slots`` (one traced gather over every per-slot
+            leaf) and resume is ``restore_slots`` (the inverse scatter).
+  host    — :class:`SlabScheduler`: a slot table + priority admission
+            queue (:class:`AdmissionQueue`, strict (priority, arrival)
+            order) with a pluggable QoS policy:
+
+              fifo     — run-to-completion (the default; with uniform
+                         priorities this is exactly FIFO admission).
+              preempt  — a queued strictly-higher-priority session may
+                         snapshot-evict the lowest-priority active slot;
+                         the victim re-queues (keeping its progress and
+                         device snapshot) and later restores into a free
+                         slot and resumes.
+              deadline — sessions whose completion deadline has passed
+                         are dropped from the queue or evicted from their
+                         slot and counted as ``missed``.
+
+Sessions come in two flavors sharing one code path: **closed** sessions
+arrive with their whole clip (``SessionRequest(clip=...)`` — the batch
+load-generator path), while **open** sessions (the ``GcnService``
+open/submit/poll/close path) grow a frame buffer incrementally and are
+*held* — per-slot frozen in place via the engine's ``hold`` mask, not
+zero-padded — whenever the buffer is empty but the stream has not been
+closed.
+
+The scheduler is pure host bookkeeping (numpy in, numpy out) so it unit-
+tests without jax — device snapshots never enter it; :meth:`tick_inputs`
+returns a :class:`TickPlan` naming which slots to snapshot/restore and the
+driver (:class:`repro.serving.GcnService`) holds the captures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import os
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_BENCH_PATH = "BENCH_sessions.json"
+
+QOS_POLICIES = ("fifo", "preempt", "deadline")
+
+
+# ---------------------------------------------------------------------------
+# load generation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SessionRequest:
+    """One incoming stream session.
+
+    Two construction modes share this type:
+
+    * **closed** — ``clip`` is the whole (T, V, C) skeleton clip up front
+      (the load-generator path); the session's service time is known at
+      admission.
+    * **open** — ``clip=None``; frames arrive incrementally via
+      :meth:`push_frame` and the stream ends with :meth:`close` (the
+      ``GcnService.submit``/``close`` path).  Until closed, a starved slot
+      is held in place rather than flushed.
+
+    ``priority`` orders admission (larger = more urgent; ties are FIFO by
+    arrival) and selects preemption victims under the ``preempt`` policy;
+    ``deadline`` is the absolute tick by which the session must *complete*
+    under the ``deadline`` policy (None = no deadline)."""
+
+    sid: int
+    arrival: int             # tick index at which the session arrives
+    clip: Optional[np.ndarray] = None   # (T, V, C) raw frames (closed mode)
+    priority: int = 0
+    deadline: Optional[int] = None
+
+    def __post_init__(self):
+        self._buf: List[np.ndarray] = []
+        self._closed = self.clip is not None
+        self._released: Optional[int] = None
+
+    def push_frame(self, frame: np.ndarray) -> None:
+        """Append one (V, C) raw frame to an open session's buffer."""
+        if self._closed:
+            raise ValueError(f"session {self.sid} is closed")
+        self._buf.append(np.asarray(frame, np.float32))
+
+    def close(self) -> None:
+        """End an open session's stream: no more frames will arrive, so the
+        scheduler can compute the flush-drain budget and finish it."""
+        self._closed = True
+
+    def is_closed(self) -> bool:
+        """True once the stream has ended (closed clips always are)."""
+        return self._closed
+
+    def n_frames(self) -> int:
+        """Raw frames available so far (clip length for closed sessions;
+        the final count survives :meth:`release_frames`)."""
+        if self._released is not None:
+            return self._released
+        return len(self.clip) if self.clip is not None else len(self._buf)
+
+    def frame(self, i: int) -> np.ndarray:
+        """The i-th raw (V, C) frame."""
+        return self.clip[i] if self.clip is not None else self._buf[i]
+
+    def release_frames(self) -> None:
+        """Drop the frame payload once the session has finished (or been
+        dropped) and its outcome is recorded — a long-lived service must
+        not pin every served clip in memory.  ``n_frames`` keeps
+        answering with the final count; ``frame`` is no longer valid."""
+        self._released = self.n_frames()
+        self.clip = None
+        self._buf = []
+
+
+@dataclasses.dataclass
+class SessionRecord:
+    """A completed session: identity, timing, QoS history, final logits."""
+
+    sid: int
+    frames: int              # clip length T (real frames)
+    arrival: int             # tick of arrival (queue entry)
+    admitted: int            # tick of first slot admission
+    finished: int            # tick the drained logits were captured
+    wall_admitted: float     # monotonic seconds
+    wall_first_logit: float  # first *valid* logit contribution for this slot
+                             # (-1.0 sentinel: the session never produced one)
+    wall_finished: float
+    logits: np.ndarray       # (num_classes,) post-drain prediction
+    priority: int = 0
+    preemptions: int = 0     # times this session was snapshot-evicted
+
+
+def _requests_from_arrivals(
+    arrivals: np.ndarray,
+    lengths: Sequence[int],
+    joints: int,
+    channels: int,
+    rng: np.random.Generator,
+    clip_source: Optional[Callable[[int, int], np.ndarray]],
+    priorities: Optional[Sequence[int]],
+    high_priority_ratio: float,
+) -> List[SessionRequest]:
+    """Shared request-building tail of the load generators: the priority
+    mix (explicit ``priorities`` win over the ``high_priority_ratio``
+    Bernoulli draw), the uniform clip-length choice, and clip content
+    from ``clip_source(sid, T) -> (T, V, C)`` (standard-normal synthetic
+    skeletons by default).  Draw order is part of the determinism
+    contract: priorities first, then one (length, clip) pair per session
+    in sid order, all from the caller's ``rng``."""
+    if priorities is None:
+        priorities = (rng.random(len(arrivals))
+                      < high_priority_ratio).astype(int)
+    reqs = []
+    for sid, at in enumerate(arrivals):
+        T = int(rng.choice(np.asarray(lengths)))
+        if clip_source is not None:
+            clip = np.asarray(clip_source(sid, T), np.float32)
+        else:
+            clip = rng.standard_normal((T, joints, channels)).astype(np.float32)
+        reqs.append(SessionRequest(sid=sid, arrival=int(at), clip=clip,
+                                   priority=int(priorities[sid])))
+    return reqs
+
+
+def poisson_arrivals(
+    n_sessions: int,
+    mean_interarrival: float,
+    lengths: Sequence[int],
+    joints: int,
+    channels: int,
+    seed: int = 0,
+    clip_source: Optional[Callable[[int, int], np.ndarray]] = None,
+    priorities: Optional[Sequence[int]] = None,
+    high_priority_ratio: float = 0.0,
+) -> List[SessionRequest]:
+    """Poisson-process session arrivals (exponential inter-arrival ticks).
+
+    Clip/priority semantics per :func:`_requests_from_arrivals`.  Returns
+    requests sorted by arrival tick (the first arrival anchors tick 0)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_interarrival, size=n_sessions)
+    arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(int)
+    return _requests_from_arrivals(arrivals, lengths, joints, channels, rng,
+                                   clip_source, priorities,
+                                   high_priority_ratio)
+
+
+def bursty_arrivals(
+    n_sessions: int,
+    lengths: Sequence[int],
+    joints: int,
+    channels: int,
+    *,
+    burst_size: int = 4,
+    burst_gap: float = 1.0,
+    lull_gap: float = 60.0,
+    seed: int = 0,
+    clip_source: Optional[Callable[[int, int], np.ndarray]] = None,
+    priorities: Optional[Sequence[int]] = None,
+    high_priority_ratio: float = 0.0,
+) -> List[SessionRequest]:
+    """Bursty Poisson arrivals: alternating traffic peaks and lulls.
+
+    Sessions arrive in bursts of ``burst_size`` spaced by exponential
+    ``burst_gap`` ticks, with an exponential ``lull_gap`` idle stretch
+    between bursts — the elastic-capacity stress load (a fixed small slab
+    queues the bursts, a fixed large slab idles through the lulls; the
+    elastic tier manager should do neither).  Clip/priority semantics per
+    :func:`_requests_from_arrivals`."""
+    rng = np.random.default_rng(seed)
+    gaps = []
+    for i in range(n_sessions):
+        if i == 0:
+            gaps.append(0.0)
+        elif i % burst_size == 0:
+            gaps.append(rng.exponential(lull_gap))
+        else:
+            gaps.append(rng.exponential(burst_gap))
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    return _requests_from_arrivals(arrivals, lengths, joints, channels, rng,
+                                   clip_source, priorities,
+                                   high_priority_ratio)
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side view of one slab slot holding an admitted session.
+
+    A preempted session is re-queued as this same object (progress,
+    first-logit latch and preemption count travel with it), which is also
+    how re-admission knows to restore its device snapshot rather than
+    reset the slot.  ``total`` is None while the session is still open
+    (clip length unknown); ``held`` marks a starved open session this tick
+    (no step was taken for it)."""
+
+    req: SessionRequest
+    admitted: int            # first admission tick
+    rel: int                 # raw frames fed so far (clip + flush)
+    total: Optional[int]     # clip length + flush drain (None until closed)
+    wall_admitted: float
+    wall_first_logit: float = -1.0
+    preemptions: int = 0
+    held: bool = False
+
+
+class AdmissionQueue:
+    """Priority admission queue: strict (priority desc, arrival, seq) order.
+
+    With uniform priorities the (arrival, seq) tie-break makes this exactly
+    a FIFO — today's behavior is the degenerate case, not a second code
+    path.  Items are fresh :class:`SessionRequest`\\ s or preempted
+    :class:`_Slot`\\ s awaiting re-admission (both carry the same ordering
+    key through their request)."""
+
+    def __init__(self):
+        self._heap: List[Tuple[int, int, int, Any]] = []
+        self._seq = 0
+
+    @staticmethod
+    def _req(item) -> SessionRequest:
+        return item.req if isinstance(item, _Slot) else item
+
+    def push(self, item) -> None:
+        """Queue a session (or a preempted slot) by (priority, arrival)."""
+        r = self._req(item)
+        heapq.heappush(self._heap, (-r.priority, r.arrival, self._seq, item))
+        self._seq += 1
+
+    def pop(self):
+        """Remove and return the highest-priority (then earliest) item."""
+        return heapq.heappop(self._heap)[-1]
+
+    def peek_priority(self) -> int:
+        """Priority of the head item (the next admission)."""
+        return -self._heap[0][0]
+
+    def drop_if(self, pred: Callable[[Any], bool]) -> List[Any]:
+        """Remove and return every queued item for which ``pred`` holds
+        (deadline expiry sweep); the queue keeps its heap order."""
+        kept, dropped = [], []
+        for entry in self._heap:
+            (dropped if pred(entry[-1]) else kept).append(entry)
+        if dropped:
+            self._heap = kept
+            heapq.heapify(self._heap)
+        return [e[-1] for e in dropped]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self):
+        """Iterate the queued items in heap (not pop) order — read-only
+        inspection (e.g. ``GcnService.poll`` finding a preempted slot)."""
+        return (entry[-1] for entry in self._heap)
+
+
+@dataclasses.dataclass
+class TickPlan:
+    """One tick's device work order, built by ``SlabScheduler.tick_inputs``.
+
+    ``frames``/``valid``/``reset``/``hold`` feed ``engine.step_frames``
+    unchanged.  ``snapshot`` lists (slot, sid) pairs the driver must
+    capture with ``engine.snapshot_slots`` *before* the step (preemption
+    evictions); ``restore`` lists (slot, sid) pairs whose stored snapshot
+    must be scattered back with ``engine.restore_slots`` before the step."""
+
+    frames: np.ndarray
+    valid: np.ndarray
+    reset: np.ndarray
+    snapshot: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    restore: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    hold: Optional[np.ndarray] = None
+
+    def __iter__(self):
+        """Deprecated back-compat unpacking: ``frames, valid, reset =
+        tick_inputs()`` — silently drops the ``hold`` mask (and the
+        snapshot/restore orders), so drivers must migrate to the named
+        fields."""
+        warnings.warn(
+            "unpacking TickPlan as a (frames, valid, reset) 3-tuple is "
+            "deprecated: it drops the hold mask and the snapshot/restore "
+            "orders — use the named fields (.frames/.valid/.reset/.hold/"
+            ".snapshot/.restore)",
+            DeprecationWarning, stacklevel=2)
+        return iter((self.frames, self.valid, self.reset))
+
+
+class SlabScheduler:
+    """Slot table + priority admission queue driving ``engine.step_frames``.
+
+    Pure host logic over numpy arrays: each tick, :meth:`tick_inputs`
+    applies the QoS policy (deadline sweep, admissions, preemptions) and
+    builds the :class:`TickPlan` the jitted slab step consumes, and
+    :meth:`tick_outputs` consumes the step's logits — finalising any
+    session whose flush drain completed this tick and recycling its slot.
+
+    Timing is delegated to two plan-derived callables so the scheduler
+    itself stays jax-free: ``flush_frames(T)`` (the per-block 'same'-padding
+    drain after a T-frame clip, ``engine.stream_flush_frames``) and
+    ``first_logit_delay`` (raw frames from admission to the first valid
+    logit, ``engine.stream_first_logit_delay``).  Device snapshots never
+    enter the scheduler either: preemption/restore are *named* in the
+    TickPlan and executed by the driver.  Slot capacity is elastic through
+    :meth:`resize` — the :class:`repro.serving.GcnService` capacity
+    manager compacts active sessions into a different-size slot table and
+    migrates their device state with the same snapshot/restore
+    primitives."""
+
+    def __init__(self, slots: int, joints: int, channels: int,
+                 flush_frames: Callable[[int], int],
+                 first_logit_delay: int,
+                 policy: str = "fifo"):
+        if policy not in QOS_POLICIES:
+            raise ValueError(
+                f"unknown QoS policy {policy!r} (expected one of "
+                f"{QOS_POLICIES})")
+        self.slots: List[Optional[_Slot]] = [None] * slots
+        self.joints, self.channels = joints, channels
+        self.flush_frames = flush_frames
+        self.first_logit_delay = first_logit_delay
+        self.policy = policy
+        self.queue = AdmissionQueue()
+        self.completed: List[SessionRecord] = []
+        self.missed: List[SessionRequest] = []   # deadline-policy casualties
+        self.occupancy_samples: List[float] = []
+        self.valid_frames = 0        # real (clip) frames fed across all slots
+        self.preemptions = 0         # snapshot-evictions performed
+        self.restores = 0            # preempted sessions re-admitted
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: SessionRequest) -> None:
+        """Queue an arrived session (strict (priority, arrival) order —
+        plain FIFO when every priority is equal)."""
+        self.queue.push(req)
+
+    def busy(self) -> int:
+        """Occupied slot count (active + draining)."""
+        return sum(s is not None for s in self.slots)
+
+    def idle(self) -> bool:
+        """True when no session is queued or occupying a slot."""
+        return not self.queue and self.busy() == 0
+
+    def resize(self, new_slots: int) -> Dict[int, int]:
+        """Compact the occupied slots into a ``new_slots``-slot table.
+
+        The elastic-capacity slot remap: active sessions keep their host
+        state and are packed into slots ``0..k-1`` of the new table (k =
+        busy count, which must fit — the capacity manager only shrinks
+        when it does).  Returns the ``{old_slot: new_slot}`` mapping the
+        driver uses to migrate the matching device rows via
+        ``engine.snapshot_slots``/``restore_slots``.  Queue, records and
+        counters are untouched."""
+        occupied = [(s, slot) for s, slot in enumerate(self.slots)
+                    if slot is not None]
+        if len(occupied) > new_slots:
+            raise ValueError(
+                f"cannot resize to {new_slots} slots: {len(occupied)} "
+                "sessions are active")
+        mapping: Dict[int, int] = {}
+        slots: List[Optional[_Slot]] = [None] * new_slots
+        for ns, (s, slot) in enumerate(occupied):
+            slots[ns] = slot
+            mapping[s] = ns
+        self.slots = slots
+        return mapping
+
+    # -- policy helpers ------------------------------------------------------
+
+    def _expired(self, item, tick: int) -> bool:
+        r = AdmissionQueue._req(item)
+        return r.deadline is not None and tick > r.deadline
+
+    def _miss(self, item, tick: int) -> None:
+        r = AdmissionQueue._req(item)
+        self.missed.append(r)
+
+    def _admit(self, s: int, item, tick: int, now: float,
+               reset: np.ndarray, restore: List[Tuple[int, int]]) -> None:
+        """Place a queue item into free slot ``s``: fresh sessions get a
+        traced reset, preempted sessions get a snapshot restore.  The
+        service-time budget (``total``) stays None until the session's
+        stream is closed (a closed clip resolves it on the first tick)."""
+        if isinstance(item, _Slot):                  # resume a preemption
+            self.slots[s] = item
+            restore.append((s, item.req.sid))
+            self.restores += 1
+        else:
+            self.slots[s] = _Slot(
+                req=item, admitted=tick, rel=0, total=None,
+                wall_admitted=now)
+            reset[s] = True
+
+    # -- one tick ------------------------------------------------------------
+
+    def tick_inputs(self, tick: int, now: float) -> TickPlan:
+        """Apply the QoS policy, admit into free slots, build step inputs.
+
+        Returns a :class:`TickPlan` whose ``frames (S, V, C) f32``,
+        ``valid (S,) bool``, ``reset (S,) bool`` and ``hold (S,) bool``
+        feed the slab step (reset marks this tick's fresh admissions — the
+        traced slot zeroing; valid marks slots feeding real clip frames,
+        False = flush drain or free slot — both take the zero-padding
+        path; hold marks starved *open* sessions frozen in place), plus
+        the snapshot/restore slot lists the driver must execute around
+        it."""
+        S = len(self.slots)
+        reset = np.zeros((S,), bool)
+        snapshot: List[Tuple[int, int]] = []
+        restore: List[Tuple[int, int]] = []
+
+        if self.policy == "deadline":
+            # queue sweep: expired sessions never reach a slot (only fresh
+            # requests can be queued here — preempted _Slots exist only
+            # under the mutually-exclusive preempt policy, so no stored
+            # snapshot can be orphaned by a drop)
+            for item in self.queue.drop_if(lambda it: self._expired(it, tick)):
+                self._miss(item, tick)
+            # slot sweep: evict sessions whose deadline passed mid-service
+            for s, slot in enumerate(self.slots):
+                if slot is not None and self._expired(slot, tick):
+                    self.slots[s] = None
+                    self._miss(slot, tick)
+
+        for s in range(S):
+            if self.slots[s] is None and self.queue:
+                self._admit(s, self.queue.pop(), tick, now, reset, restore)
+
+        if self.policy == "preempt":
+            # a queued strictly-higher-priority session snapshot-evicts the
+            # lowest-priority active slot (latest admission breaks ties —
+            # the session with the least sunk progress yields first)
+            while self.queue:
+                head_p = self.queue.peek_priority()
+                cands = [(slot.req.priority, -slot.admitted, s)
+                         for s, slot in enumerate(self.slots)
+                         if slot is not None]
+                if not cands:
+                    break
+                vp, _, vs = min(cands)
+                if vp >= head_p:
+                    break
+                victim = self.slots[vs]
+                snapshot.append((vs, victim.req.sid))
+                victim.preemptions += 1
+                self.preemptions += 1
+                self.slots[vs] = None
+                self.queue.push(victim)
+                self._admit(vs, self.queue.pop(), tick, now, reset, restore)
+
+        frames = np.zeros((S, self.joints, self.channels), np.float32)
+        valid = np.zeros((S,), bool)
+        hold = np.zeros((S,), bool)
+        for s, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            slot.held = False
+            req = slot.req
+            if slot.total is None and req.is_closed():
+                n = req.n_frames()
+                slot.total = n + self.flush_frames(n)
+            if slot.rel < req.n_frames():
+                frames[s] = req.frame(slot.rel)
+                valid[s] = True
+                self.valid_frames += 1
+            elif slot.total is None:
+                # open session with an empty buffer: freeze the slot (a
+                # flush step here would inject zero padding mid-stream)
+                hold[s] = True
+                slot.held = True
+        self.occupancy_samples.append(self.busy() / S)
+        return TickPlan(frames=frames, valid=valid, reset=reset,
+                        snapshot=snapshot, restore=restore, hold=hold)
+
+    def tick_outputs(self, tick: int, logits: np.ndarray, now: float
+                     ) -> List[SessionRecord]:
+        """Advance slot clocks with this tick's logits; evict drained slots.
+
+        ``logits`` is the slab step's (S, num_classes) output.  Held slots
+        took no step and are skipped.  The first tick a slot's clock
+        reaches the first-logit delay latches the wall time (a ``>=``
+        latch, set once — the session keeps it across preemptions); a slot
+        whose flush drain completed captures its logits row as the
+        session's final prediction, is freed, and the finished
+        :class:`SessionRecord` is returned (and appended to
+        ``self.completed``)."""
+        done: List[SessionRecord] = []
+        for s, slot in enumerate(self.slots):
+            if slot is None or slot.held:
+                continue
+            if (slot.wall_first_logit < 0
+                    and slot.rel >= self.first_logit_delay - 1):
+                slot.wall_first_logit = now
+            if slot.total is not None and slot.rel == slot.total - 1:
+                rec = SessionRecord(
+                    sid=slot.req.sid, frames=slot.req.n_frames(),
+                    arrival=slot.req.arrival, admitted=slot.admitted,
+                    finished=tick, wall_admitted=slot.wall_admitted,
+                    wall_first_logit=slot.wall_first_logit,
+                    wall_finished=now,
+                    logits=np.asarray(logits[s]),
+                    priority=slot.req.priority,
+                    preemptions=slot.preemptions)
+                done.append(rec)
+                self.completed.append(rec)
+                self.slots[s] = None
+            else:
+                slot.rel += 1
+        return done
+
+
+# ---------------------------------------------------------------------------
+# benchmark row persistence
+# ---------------------------------------------------------------------------
+
+def bench_key(row: Dict) -> Tuple:
+    """Merge key of one ``BENCH_sessions.json`` row: ``(backend, slots,
+    qos, capacity, load)``.
+
+    ``capacity`` distinguishes fixed-capacity runs (``"fixed"``, the
+    default for rows written before the elastic axis existed) from elastic
+    runs (``"elastic:2,4,8"`` — the tier tuple), and ``load`` the arrival
+    process (``"poisson"`` default vs ``"burst"``) — without them an
+    elastic run and its fixed baselines under the same (backend, slots,
+    qos) would collide and clobber each other."""
+    return (row.get("backend"), row.get("slots"), row.get("qos", "fifo"),
+            row.get("capacity", "fixed"), row.get("load", "poisson"))
+
+
+def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
+    """Merge the multi-session serving rows into ``BENCH_sessions.json``.
+
+    Rows are keyed by :func:`bench_key` — ``(backend, slots, qos,
+    capacity, load)``, with legacy defaults ``qos="fifo"``,
+    ``capacity="fixed"``, ``load="poisson"`` for rows written before each
+    axis existed: an existing row with the same key is replaced in place,
+    every other row survives, and new keys are appended — so
+    ``serve sessions --backend pallas`` refreshes only the pallas rows
+    instead of clobbering the reference rows the README tables are
+    rendered from (``tools/bench_tables.py``)."""
+    existing: List[Dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+            if not isinstance(existing, list):
+                existing = []
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    fresh = {bench_key(r): {k: v for k, v in r.items() if k != "records"}
+             for r in results}
+    rows = []
+    for r in existing:
+        rows.append(fresh.pop(bench_key(r), r))
+    rows.extend(fresh.values())
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

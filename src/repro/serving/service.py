@@ -1,0 +1,634 @@
+"""`GcnService`: the session-handle serving facade over the AGCN engine.
+
+The paper's accelerator is a *serving* design — all layers resident,
+runtime-compressed features, dynamic per-PE scheduling — and this module
+is its service surface: one object owns the compiled ExecutionPlans, the
+per-tier session slabs, the QoS scheduler and the elastic capacity
+manager, and exposes the four-call session protocol:
+
+    svc = GcnService(cfg, backend="pallas", qos="preempt",
+                     capacity_tiers=(2, 4, 8, 16))
+    h = svc.open_session(priority=1)
+    svc.submit(h, frame)          # one (V, C) raw skeleton frame at a time
+    svc.tick()                    # one scheduler tick serves every session
+    svc.poll(h)                   # state + running logits
+    svc.close(h)                  # end of stream -> flush drain -> record
+
+Everything under the facade is the existing machinery recomposed: the
+host-side :class:`~repro.serving.scheduler.SlabScheduler` builds each
+tick's :class:`~repro.serving.scheduler.TickPlan`, one jitted
+``make_gcn_slab_step`` call advances every slot (admission resets, flush
+drains and starved-session holds are traced masks — no retrace within a
+tier), and QoS preemption/elastic migration both ride the engine's
+``snapshot_slots``/``restore_slots`` gather/scatter pair.
+
+**Elastic capacity** (the ROADMAP item): slot capacity is a compiled
+shape, so the service pre-builds one slab per ``capacity_tiers`` entry
+(and warms the compiled step for each), watches queue depth + occupancy
+through a hysteresis :class:`~repro.serving.capacity.CapacityManager`,
+and on a grow/shrink decision migrates every active session across slabs:
+snapshot the occupied rows, scatter them into the (pristine) target tier,
+remap the scheduler's slot table.  The locked invariant
+(tests/test_serving.py, both backends): a session migrated across tiers
+produces the same logits as the uninterrupted fixed-capacity session.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.capacity import CapacityConfig, CapacityManager
+from repro.serving.scheduler import (QOS_POLICIES, SessionRecord,
+                                     SessionRequest, SlabScheduler,
+                                     bursty_arrivals, poisson_arrivals)
+
+SESSION_STATES = ("queued", "active", "draining", "done", "missed")
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionHandle:
+    """Opaque ticket for one open session (returned by ``open_session``)."""
+
+    sid: int
+
+
+@dataclasses.dataclass
+class SessionStatus:
+    """One ``poll`` result: where the session is and what it predicts.
+
+    ``state`` ∈ ``SESSION_STATES``: *queued* (awaiting a slot — including
+    a preempted session awaiting re-admission), *active* (in a slot,
+    consuming frames; a starved open session holds here), *draining*
+    (stream closed, flush latency draining through the blocks), *done*
+    (final record available) or *missed* (dropped by the deadline
+    policy).  ``logits`` is the slot's running prediction while active/
+    draining, the final post-drain prediction when done, None otherwise."""
+
+    sid: int
+    state: str
+    frames_submitted: int
+    frames_consumed: int
+    priority: int
+    logits: Optional[np.ndarray] = None
+    record: Optional[SessionRecord] = None
+
+
+class GcnService:
+    """Multi-session GCN serving facade: open/submit/poll/close + tick.
+
+    One instance owns, per ensemble stream (joint + bone by default):
+    a compiled ``ExecutionPlan``, frozen BN calibration, and one pristine
+    session slab per capacity tier.  ``tick()`` advances every admitted
+    session by one raw frame through a single jitted slab step; admission,
+    preemption (``qos="preempt"``), deadline eviction (``qos="deadline"``)
+    and elastic tier migration all happen between steps on the host.
+
+    Parameters:
+      cfg              — a gcn-family ``ModelConfig``.
+      backend          — engine backend (``reference`` | ``pallas``).
+      qos              — scheduler policy (``fifo`` | ``preempt`` |
+                         ``deadline``).
+      capacity_tiers   — slot capacities; one entry = fixed capacity,
+                         several = elastic (service starts at the smallest
+                         tier and the capacity manager hops the ladder).
+      capacity_config  — hysteresis knobs (tiers taken from
+                         ``capacity_tiers``).
+      quant            — Q8.8-quantize the plans (the paper's C5 target).
+      seed             — parameter/init seed (ignored when ``plans`` is
+                         given).
+      plans            — prebuilt ExecutionPlan tuple: ``(joint,)`` or
+                         ``(joint, bone)``; built from ``cfg`` when None.
+      bn_stats         — frozen BN statistics per plan (tuple, or one dict
+                         shared when a single plan is given); calibrated
+                         from ``x_calib`` (or a synthetic pipeline batch)
+                         when None.
+      x_calib          — (N, T, V, C) calibration clip batch.
+      warm             — pre-compile the slab step for every tier (and the
+                         preempt gather/scatter) at construction so no
+                         session ever pays compile latency.
+    """
+
+    def __init__(self, cfg, *, backend: str = "reference", qos: str = "fifo",
+                 capacity_tiers: Sequence[int] = (8,),
+                 capacity_config: Optional[CapacityConfig] = None,
+                 quant: bool = True, seed: int = 0,
+                 plans: Optional[Tuple] = None,
+                 bn_stats: Optional[Any] = None,
+                 x_calib: Optional[np.ndarray] = None,
+                 warm: bool = True):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.agcn import engine
+        from repro.core.agcn.model import bone_stream
+        from repro.train.steps import make_gcn_slab_step
+
+        if qos not in QOS_POLICIES:
+            raise ValueError(f"unknown QoS policy {qos!r}")
+        tiers = tuple(sorted(int(t) for t in capacity_tiers))
+        if not tiers:
+            raise ValueError("capacity_tiers must name at least one tier")
+        self.cfg = cfg
+        self.backend = backend
+        self.qos = qos
+        self.tiers = tiers
+        self._jax, self._jnp, self._engine = jax, jnp, engine
+
+        # --- plans (joint [+ bone]) and their input-stream transforms -----
+        if plans is None:
+            from repro.core.pruning.plan import plan_from_config
+            from repro.models import registry
+            prune_plan = plan_from_config(cfg)
+            keys = jax.random.split(jax.random.PRNGKey(seed))
+            plans = tuple(
+                engine.build_execution_plan(
+                    registry.init_params(cfg, k), cfg, prune_plan,
+                    quant=quant, backend=backend)
+                for k in keys)
+        self.plans = tuple(plans)
+        transforms = [lambda x: x, bone_stream][: len(self.plans)]
+
+        # --- frozen BN calibration (plan-level, shared by every tier) -----
+        if bn_stats is None:
+            if x_calib is None:
+                from repro.data.pipeline import DataConfig, skeleton_batches
+                dcfg = DataConfig(global_batch=4, seq_len=cfg.gcn_frames,
+                                  seed=seed)
+                x_calib = jnp.asarray(next(skeleton_batches(cfg, dcfg))["x"])
+            bn_stats = tuple(
+                engine.collect_bn_stats(p, tf(jnp.asarray(x_calib)))
+                for p, tf in zip(self.plans, transforms))
+        elif isinstance(bn_stats, dict):
+            bn_stats = (bn_stats,) * len(self.plans)
+        self.bn_stats = tuple(bn_stats)
+
+        # --- one pristine slab per capacity tier --------------------------
+        # tier slabs are never mutated in place (every step/restore is a
+        # functional update), so the pool entry a migration reads is always
+        # the all-zero init: entering a tier needs no reset pass
+        self._tier_slabs = {
+            S: tuple(engine.init_session_slab(p, S, bn_stats=bs)
+                     for p, bs in zip(self.plans, self.bn_stats))
+            for S in tiers}
+        self.slabs = self._tier_slabs[tiers[0]]
+
+        # --- scheduler + capacity manager ---------------------------------
+        self.sched = SlabScheduler(
+            tiers[0], cfg.gcn_joints, cfg.gcn_in_channels,
+            flush_frames=self.flush_frames,
+            first_logit_delay=engine.stream_first_logit_delay(self.plans[0]),
+            policy=qos)
+        self.capman: Optional[CapacityManager] = None
+        if len(tiers) > 1:
+            ccfg = capacity_config or CapacityConfig(tiers=tiers)
+            if tuple(sorted(ccfg.tiers)) != tiers:
+                ccfg = dataclasses.replace(ccfg, tiers=tiers)
+            self.capman = CapacityManager(ccfg, start_tier=tiers[0])
+
+        # --- jitted device entry points ------------------------------------
+        self._step = jax.jit(make_gcn_slab_step(cfg))
+        self._snap_fn = jax.jit(engine.snapshot_slots)
+        self._rest_fn = jax.jit(engine.restore_slots)
+        # the tier-migration pair fused into one jit: gather rows out of
+        # the source slab, scatter into the (pristine) target slab
+        self._migrate_fn = jax.jit(
+            lambda src, dst, old_idx, new_idx: engine.restore_slots(
+                dst, new_idx, engine.snapshot_slots(src, old_idx)))
+
+        # --- session bookkeeping -------------------------------------------
+        self._next_sid = 0
+        self._sessions: Dict[int, SessionRequest] = {}
+        self._records: Dict[int, SessionRecord] = {}
+        self._snaps: Dict[int, Tuple] = {}    # sid -> per-stream snapshots
+        self._tick = 0
+        self._missed_seen = 0                 # deadline drops already released
+        self._last_logits: Optional[np.ndarray] = None
+        self.wall_s = 0.0                     # serving time inside tick()
+        self.tier_ticks: Dict[int, int] = {S: 0 for S in tiers}
+
+        if warm:
+            self._warm()
+
+    # -- construction helpers ------------------------------------------------
+
+    def _warm(self) -> None:
+        """Compile the slab step for every tier (plus the preempt
+        gather/scatter pair) before traffic arrives — post-warmup, no
+        admission/hold/occupancy combination retraces within a tier."""
+        jnp, jax = self._jnp, self._jax
+        V, C = self.cfg.gcn_joints, self.cfg.gcn_in_channels
+        for S, slabs in self._tier_slabs.items():
+            zf = jnp.zeros((S, V, C))
+            zb = jnp.zeros((S,), bool)
+            _, wl = self._step(self.plans, slabs, zf, zb, zb, zb)
+            jax.block_until_ready(wl)
+        if self.qos == "preempt":
+            # the preempt gather/scatter traces per tier shape — warm it
+            # at every tier so the first preemption after a grow is free
+            for slabs in self._tier_slabs.values():
+                w = tuple(self._snap_fn(s, jnp.asarray(0)) for s in slabs)
+                ws = tuple(self._rest_fn(s, jnp.asarray(0), x)
+                           for s, x in zip(slabs, w))
+                jax.block_until_ready(ws)
+        # every ordered tier pair compiles its fixed-shape migration
+        # (min(S_old, S_new) rows regardless of occupancy), so a traffic-
+        # time grow/shrink never pays trace latency
+        for a in self.tiers:
+            for b in self.tiers:
+                if a == b:
+                    continue
+                k = min(a, b)
+                idx = jnp.arange(k, dtype=jnp.int32)
+                out = tuple(self._migrate_fn(sa, sb, idx, idx)
+                            for sa, sb in zip(self._tier_slabs[a],
+                                              self._tier_slabs[b]))
+                jax.block_until_ready(out)
+
+    # -- plan-derived timing --------------------------------------------------
+
+    def flush_frames(self, frames: int) -> int:
+        """Flush-drain ticks after a ``frames``-long stream (the per-block
+        'same'-padding latency, ``engine.stream_flush_frames``)."""
+        return self._engine.stream_flush_frames(self.plans[0], frames)
+
+    @property
+    def first_logit_delay(self) -> int:
+        """Raw frames from admission to the first valid logit."""
+        return self._engine.stream_first_logit_delay(self.plans[0])
+
+    # -- the session protocol -------------------------------------------------
+
+    @property
+    def now(self) -> int:
+        """The service clock: index of the next tick to run."""
+        return self._tick
+
+    @property
+    def capacity(self) -> int:
+        """Current slot capacity (the active tier)."""
+        return len(self.sched.slots)
+
+    def open_session(self, *, priority: int = 0,
+                     deadline: Optional[int] = None,
+                     arrival: Optional[int] = None) -> SessionHandle:
+        """Open a new session and enter it into the admission queue.
+
+        The session is *open*: frames arrive via :meth:`submit` and the
+        stream ends with :meth:`close` (an admitted session with an empty
+        buffer is held in place, never zero-padded).  ``priority`` orders
+        admission and selects preemption victims; ``deadline`` is the
+        absolute completion-deadline tick under ``qos="deadline"``;
+        ``arrival`` backdates the queueing clock (defaults to now)."""
+        sid = self._next_sid
+        self._next_sid += 1
+        req = SessionRequest(
+            sid=sid, arrival=self._tick if arrival is None else int(arrival),
+            clip=None, priority=priority, deadline=deadline)
+        self._sessions[sid] = req
+        self.sched.submit(req)
+        return SessionHandle(sid=sid)
+
+    def _req(self, h: SessionHandle) -> SessionRequest:
+        try:
+            return self._sessions[h.sid]
+        except KeyError:
+            raise KeyError(f"unknown session handle {h!r}") from None
+
+    def submit(self, h: SessionHandle, frame: np.ndarray) -> None:
+        """Append one raw (V, C) skeleton frame to the session's stream."""
+        frame = np.asarray(frame, np.float32)
+        if frame.shape != (self.cfg.gcn_joints, self.cfg.gcn_in_channels):
+            raise ValueError(
+                f"expected one ({self.cfg.gcn_joints}, "
+                f"{self.cfg.gcn_in_channels}) frame, got {frame.shape}")
+        self._req(h).push_frame(frame)
+
+    def submit_clip(self, h: SessionHandle, clip: np.ndarray) -> None:
+        """Submit a whole (T, V, C) clip and close the stream — the batch
+        convenience over per-frame :meth:`submit` + :meth:`close`."""
+        for frame in np.asarray(clip, np.float32):
+            self._req(h).push_frame(frame)
+        self.close(h)
+
+    def close(self, h: SessionHandle) -> None:
+        """End the session's stream.  The scheduler drains the flush
+        latency and the final record becomes available via :meth:`poll`."""
+        self._req(h).close()
+
+    def poll(self, h: SessionHandle) -> SessionStatus:
+        """Non-blocking status: state, progress and the latest logits."""
+        req = self._req(h)
+        rec = self._records.get(h.sid)
+        if rec is not None:
+            return SessionStatus(
+                sid=h.sid, state="done", frames_submitted=req.n_frames(),
+                frames_consumed=rec.frames, priority=req.priority,
+                logits=rec.logits, record=rec)
+        if any(m is req for m in self.sched.missed):
+            return SessionStatus(
+                sid=h.sid, state="missed", frames_submitted=req.n_frames(),
+                frames_consumed=0, priority=req.priority)
+        for s, slot in enumerate(self.sched.slots):
+            if slot is not None and slot.req is req:
+                state = ("active" if slot.rel < req.n_frames()
+                         or not req.is_closed() else "draining")
+                logits = (None if self._last_logits is None
+                          else np.asarray(self._last_logits[s]))
+                return SessionStatus(
+                    sid=h.sid, state=state, frames_submitted=req.n_frames(),
+                    frames_consumed=min(slot.rel, req.n_frames()),
+                    priority=req.priority, logits=logits)
+        # queued — either never admitted, or a preempted slot awaiting
+        # re-admission (which keeps its consumed-frame progress)
+        consumed = 0
+        for item in self.sched.queue:
+            if getattr(item, "req", item) is req:
+                consumed = min(getattr(item, "rel", 0), req.n_frames())
+                break
+        return SessionStatus(
+            sid=h.sid, state="queued", frames_submitted=req.n_frames(),
+            frames_consumed=consumed, priority=req.priority)
+
+    def idle(self) -> bool:
+        """True when no session is queued or occupying a slot."""
+        return self.sched.idle()
+
+    def advance_clock(self, tick: int) -> None:
+        """Fast-forward an idle service to ``tick`` (Poisson lulls cost no
+        compute; occupancy accounting weights them as empty)."""
+        if not self.idle():
+            raise ValueError("cannot fast-forward a busy service")
+        self._tick = max(self._tick, int(tick))
+
+    # -- the serving tick -----------------------------------------------------
+
+    def tick(self) -> List[SessionRecord]:
+        """Run one scheduler tick: capacity decision (elastic), QoS policy
+        + admissions, snapshot/restore orders, one jitted slab step for
+        all slots, drain accounting.  Returns the sessions that finished
+        this tick (their records are also kept for :meth:`poll`)."""
+        jnp = self._jnp
+        t0 = time.monotonic()
+        if self.capman is not None:
+            target = self.capman.observe(
+                self.sched.busy(), len(self.sched.queue), self._tick)
+            if target is not None:
+                self._migrate(target)
+        tp = self.sched.tick_inputs(self._tick, t0)
+        for s, sid in tp.snapshot:          # capture before restore/step
+            self._snaps[sid] = tuple(
+                self._snap_fn(slab, jnp.asarray(s)) for slab in self.slabs)
+        for s, sid in tp.restore:
+            snaps = self._snaps.pop(sid)
+            self.slabs = tuple(
+                self._rest_fn(slab, jnp.asarray(s), sn)
+                for slab, sn in zip(self.slabs, snaps))
+        self.slabs, logits = self._step(
+            self.plans, self.slabs, jnp.asarray(tp.frames),
+            jnp.asarray(tp.valid), jnp.asarray(tp.reset),
+            jnp.asarray(tp.hold))
+        self._last_logits = np.asarray(logits)   # blocks until tick is done
+        done = self.sched.tick_outputs(self._tick, self._last_logits,
+                                       time.monotonic())
+        for rec in done:
+            self._records[rec.sid] = rec
+            # the record holds the outcome; drop the frame payload so a
+            # long-lived service doesn't pin every served clip in memory
+            self._sessions[rec.sid].release_frames()
+        for req in self.sched.missed[self._missed_seen:]:
+            req.release_frames()
+        self._missed_seen = len(self.sched.missed)
+        self.tier_ticks[self.capacity] += 1
+        self._tick += 1
+        self.wall_s += time.monotonic() - t0
+        return done
+
+    def run_until_idle(self, max_ticks: int = 100_000) -> int:
+        """Tick until every queued/active session has drained; returns the
+        number of ticks run.  Raises if the budget is exhausted (an open
+        session that is never closed holds its slot forever)."""
+        n = 0
+        while not self.idle():
+            if n >= max_ticks:
+                raise RuntimeError(
+                    f"service did not drain within {max_ticks} ticks — "
+                    "is an open session missing its close()?")
+            self.tick()
+            n += 1
+        return n
+
+    # -- elastic migration ----------------------------------------------------
+
+    def _migrate(self, new_S: int) -> None:
+        """Hop capacity tiers: compact the scheduler slot table, gather
+        the occupied rows out of the old slabs and scatter them into the
+        pristine target-tier slabs.  The gather/scatter is **fixed-shape**
+        — always ``min(S_old, S_new)`` rows, occupied first, padded with
+        free rows (their stale content lands in *free* target slots, which
+        the admission reset zeroes before reuse) — so each ordered tier
+        pair reuses one compiled migration regardless of occupancy, and
+        :meth:`_warm` pre-compiles every pair.  Same primitives as QoS
+        preemption, so the migrated-session parity invariant is the
+        preemption invariant."""
+        jax, jnp = self._jax, self._jnp
+        t0 = time.monotonic()
+        S_old = self.capacity
+        occupied = [s for s, slot in enumerate(self.sched.slots)
+                    if slot is not None]
+        mapping = self.sched.resize(new_S)
+        free = [s for s in range(S_old) if s not in mapping]
+        k = min(S_old, new_S)
+        old_idx = jnp.asarray((occupied + free)[:k], jnp.int32)
+        new_idx = jnp.arange(k, dtype=jnp.int32)   # == mapped targets
+        new_slabs = tuple(
+            self._migrate_fn(slab, nsl, old_idx, new_idx)
+            for slab, nsl in zip(self.slabs, self._tier_slabs[new_S]))
+        jax.block_until_ready(new_slabs)
+        self.slabs = new_slabs
+        # _last_logits is NOT remapped: _migrate only runs inside tick(),
+        # which overwrites it with the step's fresh logits before any
+        # poll() can observe the stale rows
+        if self.capman is not None and self.capman.events:
+            self.capman.events[-1].wall_ms = (time.monotonic() - t0) * 1e3
+
+    # -- metrics --------------------------------------------------------------
+
+    def metrics(self) -> Dict:
+        """Aggregate serving metrics over everything served so far — the
+        row shape merged into ``BENCH_sessions.json`` (fps, per-priority
+        latency p50/p99, occupancy both ways, first-logit delay, QoS and
+        elastic-capacity accounting) plus the completed
+        :class:`SessionRecord` list under ``"records"``."""
+        sched, wall = self.sched, self.wall_s
+        recs = sched.completed
+        lat = np.asarray([r.wall_finished - r.wall_admitted for r in recs])
+        first = np.asarray([r.wall_first_logit - r.wall_admitted
+                            for r in recs if r.wall_first_logit >= 0])
+        no_first = sum(r.wall_first_logit < 0 for r in recs)
+        qwait = np.asarray([r.admitted - r.arrival for r in recs], np.float64)
+        # per-class latency, both anchors: service time (admission→finish,
+        # wall ms) and end-to-end (arrival→finish, scheduler ticks — queue
+        # wait and preemption requeues included, which is where the QoS
+        # policies differ; tick-denominated so the comparison is
+        # deterministic, not wall noise)
+        by_prio: Dict[str, Dict[str, float]] = {}
+        for p in sorted({r.priority for r in recs}):
+            pl = np.asarray([r.wall_finished - r.wall_admitted
+                             for r in recs if r.priority == p])
+            pt = np.asarray([r.finished - r.arrival
+                             for r in recs if r.priority == p], np.float64)
+            by_prio[str(p)] = {
+                "n": int(len(pl)),
+                "p50_ms": float(np.percentile(pl, 50) * 1e3),
+                "p99_ms": float(np.percentile(pl, 99) * 1e3),
+                "e2e_p50_ticks": float(np.percentile(pt, 50)),
+                "e2e_p99_ticks": float(np.percentile(pt, 99)),
+            }
+        n_missed = len(sched.missed)
+        ticks = self._tick
+        # occupancy_samples are busy/S on *processed* ticks only; the true
+        # time-weighted occupancy counts fast-forwarded idle gaps as zero
+        # (ticks spans the whole serving window, gaps included)
+        occ_busy = float(np.mean(sched.occupancy_samples)
+                         if sched.occupancy_samples else 0.0)
+        occ_time = float(np.sum(sched.occupancy_samples) / max(ticks, 1))
+        events = self.capman.events if self.capman is not None else []
+        out = {
+            "backend": self.backend,
+            "slots": self.tiers[0],
+            "qos": self.qos,
+            "capacity": ("fixed" if len(self.tiers) == 1 else
+                         "elastic:" + ",".join(str(t) for t in self.tiers)),
+            "sessions": len(recs),
+            "ticks": ticks,
+            "wall_s": wall,
+            "frames_per_s": sched.valid_frames / wall if wall > 0 else 0.0,
+            "ticks_per_s": ticks / wall if wall > 0 else 0.0,
+            "occupancy": occ_time,
+            "occupancy_busy": occ_busy,
+            "latency_ms_p50": (float(np.percentile(lat, 50) * 1e3)
+                               if len(lat) else 0.0),
+            "latency_ms_p99": (float(np.percentile(lat, 99) * 1e3)
+                               if len(lat) else 0.0),
+            "latency_ms_by_priority": by_prio,
+            "first_logit_ms_p50": (float(np.percentile(first, 50) * 1e3)
+                                   if len(first) else 0.0),
+            "first_logit_frames": self.first_logit_delay,
+            "sessions_no_first_logit": int(no_first),
+            "queue_wait_ticks_mean": (float(qwait.mean())
+                                      if len(qwait) else 0.0),
+            "preemptions": sched.preemptions,
+            "restores": sched.restores,
+            "deadline_missed": n_missed,
+            "deadline_miss_rate": (n_missed / (n_missed + len(recs))
+                                   if (n_missed + len(recs)) else 0.0),
+            "capacity_final": self.capacity,
+            "migrations": len(events),
+            "migrations_grow": sum(e.new > e.old for e in events),
+            "migrations_shrink": sum(e.new < e.old for e in events),
+            "migration_ms_mean": (float(np.mean([e.wall_ms for e in events]))
+                                  if events else 0.0),
+            "tier_ticks": {str(S): n for S, n in self.tier_ticks.items()},
+            "records": recs,
+        }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the batch serving driver (serve sessions / BENCH rows)
+# ---------------------------------------------------------------------------
+
+def run_sessions(
+    cfg,
+    *,
+    slots: int = 8,
+    n_sessions: int = 16,
+    mean_interarrival: float = 8.0,
+    lengths: Optional[Sequence[int]] = None,
+    backend: str = "reference",
+    quant: bool = True,
+    seed: int = 0,
+    max_ticks: int = 100_000,
+    qos: str = "fifo",
+    preempt_ratio: float = 0.25,
+    deadline_slack: int = 25,
+    priorities: Optional[Sequence[int]] = None,
+    capacity_tiers: Optional[Sequence[int]] = None,
+    load: str = "poisson",
+) -> Dict:
+    """Serve ``n_sessions`` generated skeleton sessions through a
+    :class:`GcnService` with the two-stream (joint + bone) ensemble.
+
+    The batch driver over the session-handle API: each arrival becomes
+    ``open_session`` + ``submit_clip``; idle stretches fast-forward the
+    service clock.  ``capacity_tiers`` switches the service elastic (one
+    slab per tier, hysteresis grow/shrink + migration); ``slots`` alone is
+    a fixed-capacity run.  ``load`` selects the arrival process:
+    ``"poisson"`` (steady, ``mean_interarrival``) or ``"burst"`` (bursty
+    peaks and lulls — the elastic stress shape).  ``preempt_ratio`` sets
+    the load generator's high-priority mix (priority 1 vs 0) under every
+    policy — same seed, same labels, so a fifo run baselines the preempt
+    run directly; under ``qos="deadline"`` each session's completion
+    deadline is its minimal service time (clip + flush) plus
+    ``deadline_slack`` ticks past arrival.  Returns the
+    :meth:`GcnService.metrics` dict (also the row merged into
+    ``BENCH_sessions.json`` by ``serve sessions``)."""
+    from repro.data.pipeline import DataConfig, skeleton_batches
+
+    tiers = tuple(capacity_tiers) if capacity_tiers else (slots,)
+    svc = GcnService(cfg, backend=backend, qos=qos, capacity_tiers=tiers,
+                     quant=quant, seed=seed)
+
+    if lengths is None:
+        lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))
+    pool = np.asarray(next(skeleton_batches(
+        cfg, DataConfig(global_batch=n_sessions, seq_len=cfg.gcn_frames,
+                        seed=seed + 1)))["x"])
+
+    def clip_source(sid: int, T: int) -> np.ndarray:
+        return pool[sid % len(pool), :T]
+
+    # the priority mix applies under every policy (same seed -> identical
+    # labels), so a fifo run is the directly comparable baseline for the
+    # preempt run: priority admission without preemption
+    if load == "burst":
+        reqs = bursty_arrivals(
+            n_sessions, lengths, cfg.gcn_joints, cfg.gcn_in_channels,
+            burst_gap=max(1.0, mean_interarrival / 8.0),
+            lull_gap=mean_interarrival * 8.0,
+            seed=seed, clip_source=clip_source, priorities=priorities,
+            high_priority_ratio=preempt_ratio)
+    elif load == "poisson":
+        reqs = poisson_arrivals(
+            n_sessions, mean_interarrival, lengths,
+            cfg.gcn_joints, cfg.gcn_in_channels, seed=seed,
+            clip_source=clip_source, priorities=priorities,
+            high_priority_ratio=preempt_ratio)
+    else:
+        raise ValueError(f"unknown load {load!r} (poisson | burst)")
+    if qos == "deadline":
+        for r in reqs:
+            r.deadline = (r.arrival + len(r.clip)
+                          + svc.flush_frames(len(r.clip)) + deadline_slack)
+
+    pending = deque(reqs)
+    while svc.now < max_ticks:
+        while pending and pending[0].arrival <= svc.now:
+            r = pending.popleft()
+            h = svc.open_session(priority=r.priority, deadline=r.deadline,
+                                 arrival=r.arrival)
+            svc.submit_clip(h, r.clip)
+        if svc.idle():
+            if not pending:
+                break
+            svc.advance_clock(pending[0].arrival)   # fast-forward the lull
+            continue
+        svc.tick()
+
+    out = svc.metrics()          # "slots" = the service's (sorted) base tier
+    out["load"] = load
+    return out

@@ -125,24 +125,26 @@ def make_gcn_stream_step(cfg: ModelConfig) -> Callable:
 def make_gcn_slab_step(cfg: ModelConfig) -> Callable:
     """Multi-session slab step over prebuilt ExecutionPlans.
 
-    Returns ``step(plans, slabs, frames, valid, reset) -> (slabs, logits)``
-    — the scheduler-tick form of :func:`make_gcn_stream_step`: ``frames``
-    is one raw (S, V, C) frame per slab slot, ``valid`` (S,) marks slots
-    feeding real clip frames (False = flush drain or free slot), and
-    ``reset`` (S,) zeroes this tick's admissions before the frame lands
-    (engine.reset_slots — a traced mask, so admissions never retrace).
-    Both ensemble streams (joint + bone) share the same slot schedule; the
-    host-side admission/eviction logic lives in
-    ``repro.launch.sessions.SlabScheduler``."""
+    Returns ``step(plans, slabs, frames, valid, reset, hold=None) ->
+    (slabs, logits)`` — the scheduler-tick form of
+    :func:`make_gcn_stream_step`: ``frames`` is one raw (S, V, C) frame per
+    slab slot, ``valid`` (S,) marks slots feeding real clip frames (False =
+    flush drain or free slot), ``reset`` (S,) zeroes this tick's admissions
+    before the frame lands (engine.reset_slots — a traced mask, so
+    admissions never retrace), and ``hold`` (S,) freezes starved open
+    sessions in place (engine.step_frames hold).  Both ensemble streams
+    (joint + bone) share the same slot schedule; the host-side
+    admission/eviction logic lives in ``repro.serving``."""
     from repro.core.agcn import engine
     from repro.core.agcn.model import bone_stream
 
-    def slab_step(plans, slabs, frames, valid, reset):
+    def slab_step(plans, slabs, frames, valid, reset, hold=None):
         s0, logits = engine.step_frames(plans[0], slabs[0], frames, valid,
-                                        reset)
+                                        reset, hold)
         if len(plans) > 1:
             s1, lb = engine.step_frames(plans[1], slabs[1],
-                                        bone_stream(frames), valid, reset)
+                                        bone_stream(frames), valid, reset,
+                                        hold)
             return (s0, s1), 0.5 * (logits + lb)
         return (s0,), logits
 

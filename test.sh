@@ -9,8 +9,12 @@
 #   ./test.sh --fast    fast tier — deselects @pytest.mark.slow (the heavy
 #                       pallas-interpret cells; markers in pyproject.toml)
 #   ./test.sh --docs    docs tier only — intra-repo markdown links must
-#                       resolve and public docstring coverage in
-#                       src/repro/{core,kernels} must hold at 100%
+#                       resolve, public docstring coverage in
+#                       src/repro/{core,kernels,serving} must hold at 100%,
+#                       and the public API surface of repro.serving +
+#                       repro.core.agcn.engine must match the checked-in
+#                       docs/api_surface.txt (tools/check_api.py --update
+#                       regenerates it on intentional changes)
 # Extra args pass through to pytest (e.g. ./test.sh --fast -k streaming).
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -31,6 +35,7 @@ done
 
 if [ "$DOCS" = 1 ]; then
   python tools/check_docs.py
+  python tools/check_api.py
 elif [ "$FAST" = 1 ]; then
   python -m pytest -x -q -m "not slow" ${ARGS[@]+"${ARGS[@]}"}
 else
@@ -43,7 +48,9 @@ else
   trap 'rm -rf "$SMOKE_DIR"' EXIT
   python -m benchmarks.run --only kernels --smoke --out-dir "$SMOKE_DIR" > /dev/null
   test -s "$SMOKE_DIR/BENCH_kernels_bench.json"
-  # docs gates ride the full tier: broken intra-repo links or a public
-  # docstring coverage regression in core/kernels fail the build
+  # docs gates ride the full tier: broken intra-repo links, a public
+  # docstring coverage regression in core/kernels/serving, or undeclared
+  # public-API drift (docs/api_surface.txt) fail the build
   python tools/check_docs.py
+  python tools/check_api.py
 fi

@@ -19,7 +19,7 @@ from repro.configs import get_config
 from repro.core.agcn import engine
 from repro.core.agcn import model as M
 from repro.core.pruning.plan import build_prune_plan
-from repro.launch import sessions as sess
+from repro import serving as sess
 
 CFG = get_config("agcn-2s", reduced=True)
 V, C = CFG.gcn_joints, CFG.gcn_in_channels
@@ -179,12 +179,13 @@ def test_scheduler_admission_queueing_and_recycling():
     for tick in range(12):
         if sched.idle():
             break
-        frames, valid, reset = sched.tick_inputs(tick, 0.0)
+        tp = sched.tick_inputs(tick, 0.0)
         if tick in (0, 5):                  # admissions: tick 0 and recycle
-            assert reset[0]
+            assert tp.reset[0]
         else:
-            assert not reset[0]
-        assert valid[0] == (tick in (0, 1, 2, 5, 6, 7))  # clip frames only
+            assert not tp.reset[0]
+        assert tp.valid[0] == (tick in (0, 1, 2, 5, 6, 7))  # clip frames only
+        assert not tp.hold.any()            # closed clips never starve
         for rec in sched.tick_outputs(tick, logits, 0.0):
             done_at[rec.sid] = tick
     # total per session = 3 clip + 2 flush = 5 ticks; sid 1 waits 5 ticks
@@ -467,6 +468,38 @@ def test_write_bench_merges_by_backend_slots_qos(tmp_path):
     sess.write_bench([ref], path)
     rows = json.loads(open(path).read())
     assert len(rows) == 1 and rows[0]["frames_per_s"] == 500.0
+
+
+# ------------------------------------------------------------- deprecations
+
+def test_launch_sessions_shim_forwards_and_warns():
+    """The legacy import path (repro.launch.sessions) resolves every moved
+    public name from repro.serving — with a DeprecationWarning — and still
+    raises AttributeError for unknown names."""
+    from repro.launch import sessions as legacy
+    with pytest.warns(DeprecationWarning, match="moved to repro.serving"):
+        assert legacy.SlabScheduler is sess.SlabScheduler
+    with pytest.warns(DeprecationWarning):
+        assert legacy.run_sessions is sess.run_sessions
+    with pytest.warns(DeprecationWarning):
+        assert legacy.QOS_POLICIES == sess.QOS_POLICIES
+    with pytest.raises(AttributeError):
+        legacy.definitely_not_a_name
+
+
+def test_tickplan_tuple_unpack_deprecated():
+    """Unpacking a TickPlan as the legacy (frames, valid, reset) 3-tuple
+    still works but emits a DeprecationWarning (it silently drops the hold
+    mask and the snapshot/restore orders)."""
+    sched = _mini_sched(slots=1)
+    sched.submit(sess.SessionRequest(sid=0, arrival=0,
+                                     clip=np.zeros((2, V, C), np.float32)))
+    tp = sched.tick_inputs(0, 0.0)
+    with pytest.warns(DeprecationWarning, match="TickPlan"):
+        frames, valid, reset = tp
+    np.testing.assert_array_equal(frames, tp.frames)
+    np.testing.assert_array_equal(valid, tp.valid)
+    np.testing.assert_array_equal(reset, tp.reset)
 
 
 def test_run_sessions_end_to_end():

@@ -28,8 +28,14 @@ def render(path: pathlib.Path) -> str:
         if isinstance(r, dict) and "name" in r:
             us = r.get("us_per_call", 0.0)
             out.append(f"| `{r['name']}` | {us:,.0f} | {r.get('derived', '')} |")
-        else:  # sessions rows are flat metric dicts, one per (backend, qos)
+        else:  # sessions rows are flat metric dicts, one per
+               # (backend, slots, qos, capacity, load) — the merge key
             qos = r.get("qos", "fifo")
+            label = f"sessions/{r['backend']}/{qos}"
+            if r.get("capacity", "fixed") != "fixed":
+                label += f"/{r['capacity']}"
+            if r.get("load", "poisson") != "poisson":
+                label += f"[{r['load']}]"
             extra = ""
             if r.get("preemptions"):
                 extra = (f", preempt/restore "
@@ -37,8 +43,12 @@ def render(path: pathlib.Path) -> str:
             if r.get("deadline_missed"):
                 extra += (f", missed {r['deadline_missed']} "
                           f"({r.get('deadline_miss_rate', 0)*100:.0f}%)")
+            if r.get("migrations"):
+                extra += (f", {r.get('migrations_grow', 0)} grow / "
+                          f"{r.get('migrations_shrink', 0)} shrink "
+                          f"@ {r.get('migration_ms_mean', 0):.1f}ms")
             out.append(
-                f"| `sessions/{r['backend']}/{qos}` | — | "
+                f"| `{label}` | — | "
                 f"{r['sessions']} sessions / {r['slots']} slots, "
                 f"{r['frames_per_s']:.1f} frames/s, "
                 f"occupancy(time-weighted) {r['occupancy']*100:.0f}%, "

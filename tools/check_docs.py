@@ -9,11 +9,15 @@ Two checks, both hard failures:
    deleted files are worse than no docs.
 
 2. **Docstring coverage** — every *public* module, class, function and
-   method under ``src/repro/core`` and ``src/repro/kernels`` must carry a
-   docstring (names starting with ``_`` are exempt).  These two trees hold
-   the paper mechanisms (pruning, RFC format, cavity/graph kernels, the
-   execution engine); the coverage floor is 100%, so any public addition
+   method under ``src/repro/core``, ``src/repro/kernels`` and
+   ``src/repro/serving`` must carry a docstring (names starting with
+   ``_`` are exempt).  These trees hold the paper mechanisms (pruning,
+   RFC format, cavity/graph kernels, the execution engine) and the public
+   serving API; the coverage floor is 100%, so any public addition
    without a shape-contract docstring fails CI rather than rotting.
+
+(The sibling ``tools/check_api.py`` gate snapshots the *signatures* of
+the serving + engine surface — see ``docs/api_surface.txt``.)
 
 Run directly (``python tools/check_docs.py``) or via ``./test.sh --docs``;
 the full ``./test.sh`` tier includes it.  Exit code 0 = both gates hold.
@@ -27,7 +31,8 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("**/*.md"))]
-COVERED_TREES = [REPO / "src/repro/core", REPO / "src/repro/kernels"]
+COVERED_TREES = [REPO / "src/repro/core", REPO / "src/repro/kernels",
+                 REPO / "src/repro/serving"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 
