@@ -188,6 +188,149 @@ def main():
         emit(f"throughput/measured/sessions/{backend}/shrink_8to4", t_shrink,
              f"rows=4 vs_fifo_tick={(t_shrink / t_fifo) * 100:.0f}% "
              f"(interpret CPU)")
+        # tick_fused axis: the one-dispatch serving tick (hybrid: plain
+        # async step on event-free ticks, donated engine.fused_tick on
+        # event ticks) against the legacy multi-dispatch tick (per-event
+        # snapshot/restore jits + a synchronous per-tick logit readback —
+        # GcnService's fused=False path), at the serving slot counts under
+        # two workloads: fifo (no events) and preempt-heavy (one snapshot
+        # + one restore every tick, the shape where legacy pays 2 extra
+        # dispatches + a host sync per tick)
+        _tick_fused_axis(ep, backend, cfg, x)
+
+
+def _paired(fa, fb, warmup: int = 1, iters: int = 5):
+    """Interleaved A/B minima (µs): alternating fa/fb per round so slow
+    wall-clock drift hits both variants equally — a plain back-to-back
+    ``time_fn`` pair separates them by minutes on the interpret-mode
+    points and the drift swamps the few-percent deltas this axis reads.
+    Interpret-mode noise (collector pauses, scheduler preemptions, cache
+    state) is strictly additive, so min-of-N converges on the true cost
+    — the same estimator ``timeit`` documents for exactly this reason."""
+    import gc
+    import time as _time
+
+    from benchmarks import common
+    if common.SMOKE:
+        warmup, iters = 0, 1
+    for _ in range(warmup):
+        fa()
+        fb()
+    ta, tb = [], []
+    # interpret-mode calls churn enough Python objects that collector
+    # pauses land mid-call and read as per-variant jitter — collect once,
+    # then keep the collector out of the timed rounds
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            fa()
+            ta.append(_time.perf_counter() - t0)
+            t0 = _time.perf_counter()
+            fb()
+            tb.append(_time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return min(ta) * 1e6, min(tb) * 1e6
+
+
+def _tick_fused_axis(ep, backend, cfg, x):
+    """Emit throughput/measured/tick_fused rows: fused vs legacy ticks/s
+    at the serving slot counts, fifo vs preempt-heavy workloads."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks import common
+    from repro.core.agcn import engine
+    from repro.serving.scheduler import max_events_for, pad_event_orders
+
+    fused_fn = jax.jit(engine.fused_tick, donate_argnums=(1, 8))
+    snap_j = jax.jit(engine.snapshot_slots)
+    rest_j = jax.jit(engine.restore_slots)
+    stepS = jax.jit(engine.step_frames)
+    # smoke tier: exercise the fused path end-to-end at S=4 only (the
+    # full axis at S=256 is minutes of interpret-mode wall time)
+    s_list = (4,) if common.SMOKE else (16, 64, 256)
+    for S in s_list:
+        # ticks per timed call (amortises the fused path's end-of-burst
+        # readback); a pallas-interpret S=256 tick is ~6 s, so that point
+        # trades burst length for more median samples
+        nticks = 4 if S <= 64 else 2
+        pristine = engine.init_session_slab(ep, S, x_calib=x)
+        frames = jnp.zeros((S, cfg.gcn_joints, cfg.gcn_in_channels))
+        valid = jnp.asarray(np.arange(S) % 2 == 0)     # half occupancy
+        zeros = jnp.zeros((S,), bool)
+        E = max_events_for(S)
+        # preempt-heavy = the scheduler's full per-tick event budget:
+        # every tick snapshots slots 0..E-1 into ring rows 0..E-1 and
+        # restores ring rows E..2E-1 back into the same slots (steady-
+        # state churn at max admissible rate) — legacy pays 2 dispatches
+        # *per event* here, the fused megakernel still pays one total
+        snap_o = jnp.asarray(pad_event_orders([(i, i) for i in range(E)], E))
+        rest_o = jnp.asarray(pad_event_orders(
+            [(i, E + i) for i in range(E)], E))
+
+        # each variant carries its slab (and ring) across timed calls so
+        # the timed region holds exactly what the service's tick loop
+        # pays — the one-time slab copy / ring init happens here, outside
+        st = {
+            "leg": {"slab": pristine,
+                    "hot": [snap_j(pristine, jnp.asarray(i))
+                            for i in range(E)]},
+            "fus": {"slab": jax.tree_util.tree_map(jnp.copy, pristine),
+                    "ring": engine.init_snapshot_ring(pristine, 2 * E)},
+        }
+
+        def run_legacy(preempt):
+            s = st["leg"]
+            slab, logits = s["slab"], None
+            for _ in range(nticks):
+                if preempt:
+                    for i in range(E):
+                        hot2 = snap_j(slab, jnp.asarray(i))
+                        slab = rest_j(slab, jnp.asarray(i), s["hot"][i])
+                        s["hot"][i] = hot2
+                slab, logits = stepS(ep, slab, frames, valid, zeros, zeros)
+                np.asarray(logits)   # the legacy per-tick host sync
+            s["slab"] = slab
+            return logits
+
+        def run_fused(preempt):
+            # the service's hybrid dispatch: event-free ticks run the
+            # plain step, event ticks run the donated megakernel —
+            # either way one dispatch per tick, logits left on device
+            s = st["fus"]
+            slab, logits = s["slab"], None
+            if preempt:
+                ring = s["ring"]
+                for _ in range(nticks):
+                    slab, logits, ring = fused_fn(
+                        ep, slab, frames, valid, zeros, zeros,
+                        snap_o, rest_o, ring)
+                s["ring"] = ring
+            else:
+                for _ in range(nticks):
+                    slab, logits = stepS(ep, slab, frames, valid,
+                                         zeros, zeros)
+            s["slab"] = slab
+            np.asarray(logits)       # async: one readback per burst
+            return logits
+
+        # S=256 interpret ticks are seconds, so fewer samples there
+        iters = 9 if S <= 16 else (7 if S <= 64 else 5)
+        for wl in ("fifo", "preempt"):
+            pre = wl == "preempt"
+            t_leg, t_fus = _paired(lambda: run_legacy(pre),
+                                   lambda: run_fused(pre), iters=iters)
+            t_leg /= nticks
+            t_fus /= nticks
+            emit(f"throughput/measured/tick_fused/{backend}/S{S}/legacy/{wl}",
+                 t_leg, f"ticks_per_s={1e6 / t_leg:.1f} (interpret CPU)")
+            emit(f"throughput/measured/tick_fused/{backend}/S{S}/fused/{wl}",
+                 t_fus, f"ticks_per_s={1e6 / t_fus:.1f} "
+                 f"speedup_vs_legacy={t_leg / t_fus:.2f}x "
+                 f"(1 dispatch/tick, async readback, interpret CPU)")
 
 
 if __name__ == "__main__":

@@ -812,6 +812,119 @@ def restore_slots(state: StreamState, idx, snap: Dict[str, Any]
         bn_stats=state.bn_stats, rfc=rfc)
 
 
+# sentinel slot/ring index marking a padded no-op event in the fixed-shape
+# snapshot/restore order buffers consumed by fused_tick: far out of bounds
+# for any slab or ring axis, so the gather clamps it (value discarded) and
+# the scatter drops it — a padded event touches nothing
+SNAP_SENTINEL = np.int32(2 ** 30)
+
+
+def init_snapshot_ring(slab: StreamState, capacity: int) -> Dict[str, Any]:
+    """Preallocated on-device snapshot ring: ``capacity`` rows, each shaped
+    like one slot's :func:`snapshot_slots` capture.
+
+    The ring replaces host-side per-event snapshot tuples in the fused
+    serving tick (:func:`fused_tick`): preemption captures are scattered
+    into ring rows and restores gather them back out, all inside one
+    dispatch, with the host only tracking which row holds which session.
+    Row shapes are per-slot (independent of the slab's capacity S), so one
+    ring serves every capacity tier and survives elastic migrations."""
+    idx = jnp.zeros((int(capacity),), jnp.int32)
+    return jax.tree_util.tree_map(jnp.zeros_like, snapshot_slots(slab, idx))
+
+
+def snapshot_to_ring(slab: StreamState, ring: Dict[str, Any],
+                     order) -> Dict[str, Any]:
+    """Apply a fixed-shape batch of snapshot events: for each (slot, row)
+    pair in ``order``, gather slot ``slot``'s per-slot state out of the
+    slab and write it into ring row ``row``.
+
+    ``order`` is an (E, 2) int32 array padded with :data:`SNAP_SENTINEL`
+    no-op rows, so any event count from 0 to E reuses one compilation —
+    sentinel gathers clamp (their value is discarded) and sentinel
+    scatters drop.  Returns the updated ring; the slab is read-only."""
+    order = jnp.asarray(order, jnp.int32)
+    S = slab.t_raw.shape[0]
+    rows = snapshot_slots(slab, jnp.minimum(order[:, 0], S - 1))
+    dst = order[:, 1]
+
+    def put(r, x):
+        return r.at[dst].set(jnp.asarray(x, r.dtype), mode="drop")
+
+    return jax.tree_util.tree_map(put, ring, rows)
+
+
+def restore_from_ring(slab: StreamState, ring: Dict[str, Any],
+                      order) -> StreamState:
+    """Apply a fixed-shape batch of restore events: for each (slot, row)
+    pair in ``order``, gather ring row ``row`` and scatter it into slab
+    slot ``slot`` — the inverse of :func:`snapshot_to_ring`, with the same
+    :data:`SNAP_SENTINEL` padding semantics (sentinel events touch no
+    slot).  Returns the updated slab; ring rows are read-only (a restored
+    row's stale copy stays in the ring until the host reuses it)."""
+    order = jnp.asarray(order, jnp.int32)
+    slot = order[:, 0]
+    R = ring["t_raw"].shape[0]
+    src = jnp.minimum(order[:, 1], R - 1)
+
+    def g(leaf):
+        return jnp.take(leaf, src, axis=0, mode="clip")
+
+    def s(leaf, sv):
+        return leaf.at[slot].set(jnp.asarray(sv, leaf.dtype), mode="drop")
+
+    blocks = [{k: s(v, g(rb[k])) for k, v in b.items()}
+              for b, rb in zip(slab.blocks, ring["blocks"])]
+    rfc = None
+    if slab.rfc is not None:
+        rfc = [{k: s(v, g(rr[k])) for k, v in r.items()}
+               for r, rr in zip(slab.rfc, ring["rfc"])]
+    return StreamState(
+        t_raw=s(slab.t_raw, g(ring["t_raw"])), blocks=blocks,
+        pool_ring=(s(slab.pool_ring, g(ring["pool_ring"]))
+                   if slab.pool_ring is not None else None),
+        pool_sum=s(slab.pool_sum, g(ring["pool_sum"])),
+        pool_t=s(slab.pool_t, g(ring["pool_t"])),
+        bn_stats=slab.bn_stats, rfc=rfc)
+
+
+def fused_tick(
+    plan: ExecutionPlan,
+    slab: StreamState,
+    frames: jnp.ndarray,             # (S, V, C) one raw frame per slot
+    valid,                           # (S,) bool — per-slot clip/flush phase
+    reset,                           # (S,) bool — admission reset
+    hold,                            # (S,) bool — freeze starved open slots
+    snap_order,                      # (E, 2) int32 (slot, ring row) padded
+    rest_order,                      # (E, 2) int32 (slot, ring row) padded
+    snap_ring: Dict[str, Any],       # init_snapshot_ring state
+) -> Tuple[StreamState, jnp.ndarray, Dict[str, Any]]:
+    """One serving tick as a single device dispatch: snapshot gathers,
+    restore scatters, admission resets, hold masking and the slab step,
+    fused — returns ``(slab, logits, snap_ring)``.
+
+    The multi-dispatch tick (one jitted call per snapshot event, one per
+    restore event, then :func:`step_frames`) becomes one jitted function:
+    ``snap_order``/``rest_order`` are fixed-shape (E, 2) traced index
+    arrays padded with :data:`SNAP_SENTINEL` no-ops, so *any* per-tick
+    event count reuses one compilation per slab capacity, and the captures
+    live in the preallocated on-device ``snap_ring`` instead of host-side
+    Python tuples.  Event semantics match the multi-dispatch sequence:
+    snapshots gather from the **pre-tick** slab (capture before restore),
+    restores scatter ring rows written this tick or earlier (a same-tick
+    snapshot→restore resumes correctly), then ``reset`` zeroes fresh
+    admissions before their first frame lands.
+
+    Built for donation: jit it with the slab and ring donated
+    (``donate_argnums``) so XLA updates the rings in place — after the
+    call the *input* slab/ring buffers are dead and the caller must only
+    ever touch the returned ones."""
+    new_ring = snapshot_to_ring(slab, snap_ring, snap_order)
+    slab = restore_from_ring(slab, new_ring, rest_order)
+    new_slab, logits = step_frames(plan, slab, frames, valid, reset, hold)
+    return new_slab, logits, new_ring
+
+
 def stream_flush_frames(plan: ExecutionPlan, frames: int) -> int:
     """Raw flush steps (zero frames, valid=False) needed after a ``frames``-
     long clip so the final valid output drains through every block's

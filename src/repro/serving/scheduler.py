@@ -57,6 +57,51 @@ DEFAULT_BENCH_PATH = "BENCH_sessions.json"
 
 QOS_POLICIES = ("fifo", "preempt", "deadline")
 
+# sentinel (slot, ring row) value padding the fixed-shape event-order
+# buffers consumed by the fused serving tick — must equal
+# ``repro.core.agcn.engine.SNAP_SENTINEL`` (redefined here as a plain int
+# so this module stays jax-free; equality is locked in tests)
+SNAP_SENTINEL = 2 ** 30
+
+# per-tick snapshot/restore event budget cap: the fused tick's order
+# buffers are padded to a *static* ``max_events_for(slots)`` rows, so
+# every sentinel row costs one (dropped) gather/scatter per leaf per tick
+# — capping keeps that overhead bounded at large slot counts while the
+# scheduler defers surplus preemptions/restores to later ticks
+MAX_EVENTS_PER_TICK = 8
+
+
+def max_events_for(slots: int) -> int:
+    """The static per-tick snapshot/restore event-buffer width for a
+    ``slots``-slot tier: ``min(slots, max(MAX_EVENTS_PER_TICK,
+    slots // 8))``.  One tick can structurally produce at most ``slots``
+    events of either kind (each slot is evicted/admitted at most once per
+    tick); the floor bounds the padded no-op gather/scatter cost at small
+    tiers, while the ``slots // 8`` term scales the budget with capacity
+    so a big slab's preemption throughput isn't starved at 8 events/tick
+    (at S=256 a fixed budget would need 32 ticks to turn the slab over)."""
+    slots = int(slots)
+    return min(slots, max(MAX_EVENTS_PER_TICK, slots // 8))
+
+
+def pad_event_orders(events: Sequence[Tuple[int, int]],
+                     max_events: int) -> np.ndarray:
+    """Pad a list of (slot, ring row) events to the fixed-shape
+    ``(max_events, 2)`` int32 order buffer the fused tick consumes, with
+    :data:`SNAP_SENTINEL` no-op rows — any event count from 0 to
+    ``max_events`` reuses one compilation per tier.  Raises when the
+    events overflow the static buffer (the scheduler's own budgets make
+    that structurally impossible; direct callers must size ahead)."""
+    if len(events) > max_events:
+        raise ValueError(
+            f"{len(events)} snapshot/restore events overflow the static "
+            f"max_events={max_events} order buffer — the fused tick's "
+            "shapes are compiled per tier and cannot grow at traffic time")
+    out = np.full((max_events, 2), SNAP_SENTINEL, np.int32)
+    for i, (slot, row) in enumerate(events):
+        out[i] = (slot, row)
+    return out
+
 
 # ---------------------------------------------------------------------------
 # load generation
@@ -275,6 +320,7 @@ class AdmissionQueue:
     def __init__(self):
         self._heap: List[Tuple[int, int, int, Any]] = []
         self._seq = 0
+        self._by_sid: Dict[int, Any] = {}
 
     @staticmethod
     def _req(item) -> SessionRequest:
@@ -285,14 +331,27 @@ class AdmissionQueue:
         r = self._req(item)
         heapq.heappush(self._heap, (-r.priority, r.arrival, self._seq, item))
         self._seq += 1
+        self._by_sid[r.sid] = item
 
     def pop(self):
         """Remove and return the highest-priority (then earliest) item."""
-        return heapq.heappop(self._heap)[-1]
+        item = heapq.heappop(self._heap)[-1]
+        self._by_sid.pop(self._req(item).sid, None)
+        return item
+
+    def peek(self):
+        """The head item (next admission) without removing it, or None."""
+        return self._heap[0][-1] if self._heap else None
 
     def peek_priority(self) -> int:
         """Priority of the head item (the next admission)."""
         return -self._heap[0][0]
+
+    def get(self, sid: int):
+        """O(1) lookup by session id: the queued item (fresh request or
+        preempted slot awaiting re-admission), or None if not queued —
+        ``GcnService.poll`` runs this per call, so no linear scans."""
+        return self._by_sid.get(sid)
 
     def drop_if(self, pred: Callable[[Any], bool]) -> List[Any]:
         """Remove and return every queued item for which ``pred`` holds
@@ -303,6 +362,8 @@ class AdmissionQueue:
         if dropped:
             self._heap = kept
             heapq.heapify(self._heap)
+        for e in dropped:
+            self._by_sid.pop(self._req(e[-1]).sid, None)
         return [e[-1] for e in dropped]
 
     def __len__(self) -> int:
@@ -325,7 +386,13 @@ class TickPlan:
     unchanged.  ``snapshot`` lists (slot, sid) pairs the driver must
     capture with ``engine.snapshot_slots`` *before* the step (preemption
     evictions); ``restore`` lists (slot, sid) pairs whose stored snapshot
-    must be scattered back with ``engine.restore_slots`` before the step."""
+    must be scattered back with ``engine.restore_slots`` before the step.
+
+    When the scheduler was built with a snapshot ring (``snap_ring``),
+    ``snap_order``/``rest_order`` additionally carry the same events as
+    fixed-shape ``(max_events, 2)`` int32 (slot, ring row) buffers padded
+    with :data:`SNAP_SENTINEL` — the one-dispatch form consumed by
+    ``engine.fused_tick`` (None otherwise)."""
 
     frames: np.ndarray
     valid: np.ndarray
@@ -333,6 +400,8 @@ class TickPlan:
     snapshot: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     restore: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     hold: Optional[np.ndarray] = None
+    snap_order: Optional[np.ndarray] = None
+    rest_order: Optional[np.ndarray] = None
 
     def __iter__(self):
         """Deprecated back-compat unpacking: ``frames, valid, reset =
@@ -372,7 +441,8 @@ class SlabScheduler:
     def __init__(self, slots: int, joints: int, channels: int,
                  flush_frames: Callable[[int], int],
                  first_logit_delay: int,
-                 policy: str = "fifo"):
+                 policy: str = "fifo",
+                 snap_ring: Optional[int] = None):
         if policy not in QOS_POLICIES:
             raise ValueError(
                 f"unknown QoS policy {policy!r} (expected one of "
@@ -385,10 +455,24 @@ class SlabScheduler:
         self.queue = AdmissionQueue()
         self.completed: List[SessionRecord] = []
         self.missed: List[SessionRequest] = []   # deadline-policy casualties
+        self.missed_sids: set = set()            # O(1) poll-side mirror
         self.occupancy_samples: List[float] = []
         self.valid_frames = 0        # real (clip) frames fed across all slots
         self.preemptions = 0         # snapshot-evictions performed
         self.restores = 0            # preempted sessions re-admitted
+        # per-tick event budget: the fused tick's order buffers are padded
+        # to this static width, and the QoS loops below never schedule more
+        # snapshot (or restore) events per tick than it — surplus work
+        # defers to later ticks.  Applied under every policy so the fused
+        # and legacy drivers see identical TickPlans.
+        self.max_events = max_events_for(slots)
+        # optional host-side allocator for the on-device snapshot ring
+        # (``engine.init_snapshot_ring``): rows are S-independent, so one
+        # ring serves every capacity tier and survives elastic migrations.
+        self.snap_ring = snap_ring
+        self._ring_free: List[int] = (
+            list(range(int(snap_ring))) if snap_ring is not None else [])
+        self._ring_of: Dict[int, int] = {}       # sid -> occupied ring row
 
     # -- admission -----------------------------------------------------------
 
@@ -427,6 +511,7 @@ class SlabScheduler:
             slots[ns] = slot
             mapping[s] = ns
         self.slots = slots
+        self.max_events = max_events_for(new_slots)
         return mapping
 
     # -- policy helpers ------------------------------------------------------
@@ -438,6 +523,7 @@ class SlabScheduler:
     def _miss(self, item, tick: int) -> None:
         r = AdmissionQueue._req(item)
         self.missed.append(r)
+        self.missed_sids.add(r.sid)
 
     def _admit(self, s: int, item, tick: int, now: float,
                reset: np.ndarray, restore: List[Tuple[int, int]]) -> None:
@@ -488,13 +574,28 @@ class SlabScheduler:
 
         for s in range(S):
             if self.slots[s] is None and self.queue:
+                # restore-budget gate: re-admitting a preempted head costs
+                # one restore event; once the tick's budget is spent, stop
+                # admitting (skipping the head would break strict priority
+                # order) — the queue drains next tick
+                if (isinstance(self.queue.peek(), _Slot)
+                        and len(restore) >= self.max_events):
+                    break
                 self._admit(s, self.queue.pop(), tick, now, reset, restore)
 
         if self.policy == "preempt":
             # a queued strictly-higher-priority session snapshot-evicts the
             # lowest-priority active slot (latest admission breaks ties —
-            # the session with the least sunk progress yields first)
+            # the session with the least sunk progress yields first);
+            # capped at max_events snapshots (and restores) per tick so
+            # the fused tick's fixed-shape order buffers always fit —
+            # surplus preemptions simply happen a tick later
             while self.queue:
+                if len(snapshot) >= self.max_events:
+                    break
+                if (isinstance(self.queue.peek(), _Slot)
+                        and len(restore) >= self.max_events):
+                    break
                 head_p = self.queue.peek_priority()
                 cands = [(slot.req.priority, -slot.admitted, s)
                          for s, slot in enumerate(self.slots)
@@ -533,8 +634,46 @@ class SlabScheduler:
                 hold[s] = True
                 slot.held = True
         self.occupancy_samples.append(self.busy() / S)
+        snap_order = rest_order = None
+        if self.snap_ring is not None:
+            snap_order, rest_order = self._ring_orders(snapshot, restore)
         return TickPlan(frames=frames, valid=valid, reset=reset,
-                        snapshot=snapshot, restore=restore, hold=hold)
+                        snapshot=snapshot, restore=restore, hold=hold,
+                        snap_order=snap_order, rest_order=rest_order)
+
+    def _ring_orders(self, snapshot: List[Tuple[int, int]],
+                     restore: List[Tuple[int, int]]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Assign ring rows to this tick's events and build the padded
+        (slot, ring row) order buffers for ``engine.fused_tick``.
+
+        Snapshot rows are allocated *before* restored rows are returned to
+        the free list, so a row being read by this tick's restore scatter
+        can never be handed to this tick's snapshot gather — within the
+        fused dispatch the snapshot writes land first, and across ticks
+        device execution follows dispatch order, so next-tick reuse is
+        safe.  A same-tick snapshot→restore of one session (preempt-then-
+        readmit) reads the row the snapshot just wrote, by construction of
+        ``engine.fused_tick``."""
+        snap_events = []
+        for s, sid in snapshot:
+            if not self._ring_free:
+                raise RuntimeError(
+                    f"snapshot ring exhausted ({self.snap_ring} rows, "
+                    f"{len(self._ring_of)} live snapshots) — raise the "
+                    "service's snap_capacity")
+            row = self._ring_free.pop()
+            self._ring_of[sid] = row
+            snap_events.append((s, row))
+        rest_events = []
+        freed = []
+        for s, sid in restore:
+            row = self._ring_of.pop(sid)
+            rest_events.append((s, row))
+            freed.append(row)
+        self._ring_free.extend(freed)
+        return (pad_event_orders(snap_events, self.max_events),
+                pad_event_orders(rest_events, self.max_events))
 
     def tick_outputs(self, tick: int, logits: np.ndarray, now: float
                      ) -> List[SessionRecord]:

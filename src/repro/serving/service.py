@@ -44,7 +44,8 @@ import numpy as np
 from repro.serving.capacity import CapacityConfig, CapacityManager
 from repro.serving.scheduler import (QOS_POLICIES, SessionRecord,
                                      SessionRequest, SlabScheduler,
-                                     bursty_arrivals, poisson_arrivals)
+                                     bursty_arrivals, max_events_for,
+                                     pad_event_orders, poisson_arrivals)
 
 SESSION_STATES = ("queued", "active", "draining", "done", "missed")
 
@@ -110,6 +111,20 @@ class GcnService:
       warm             — pre-compile the slab step for every tier (and the
                          preempt gather/scatter) at construction so no
                          session ever pays compile latency.
+      fused            — serve each tick as **one** device dispatch with
+                         async logit readback.  Ticks carrying snapshot or
+                         restore events run ``engine.fused_tick`` (gathers,
+                         scatters, hold/reset masking and the slab step in
+                         a single donated-slab jit, snapshots in an
+                         on-device ring); event-free ticks run the plain
+                         slab step — still one dispatch, no ring plumbing.
+                         False restores the legacy multi-dispatch tick (one
+                         jit per snapshot/restore event + a synchronous
+                         readback) — kept for A/B parity tests and the
+                         throughput benchmark baseline.
+      snap_capacity    — snapshot-ring rows (fused path only): live
+                         preempted sessions a tick can hold device state
+                         for; defaults to ``2 * max(capacity_tiers)``.
     """
 
     def __init__(self, cfg, *, backend: str = "reference", qos: str = "fifo",
@@ -119,13 +134,14 @@ class GcnService:
                  plans: Optional[Tuple] = None,
                  bn_stats: Optional[Any] = None,
                  x_calib: Optional[np.ndarray] = None,
-                 warm: bool = True):
+                 warm: bool = True, fused: bool = True,
+                 snap_capacity: Optional[int] = None):
         import jax
         import jax.numpy as jnp
 
         from repro.core.agcn import engine
         from repro.core.agcn.model import bone_stream
-        from repro.train.steps import make_gcn_slab_step
+        from repro.train.steps import make_gcn_fused_tick, make_gcn_slab_step
 
         if qos not in QOS_POLICIES:
             raise ValueError(f"unknown QoS policy {qos!r}")
@@ -174,14 +190,23 @@ class GcnService:
             S: tuple(engine.init_session_slab(p, S, bn_stats=bs)
                      for p, bs in zip(self.plans, self.bn_stats))
             for S in tiers}
-        self.slabs = self._tier_slabs[tiers[0]]
+        # the *live* slab is a deep copy, never an alias of a tier entry:
+        # the fused tick donates its slab argument (XLA reuses the buffers
+        # in place and deletes them Python-side), and a donated alias
+        # would destroy the pristine tier slab and the shared BN stats
+        self.slabs = tuple(jax.tree_util.tree_map(jnp.copy, s)
+                           for s in self._tier_slabs[tiers[0]])
 
         # --- scheduler + capacity manager ---------------------------------
+        self.fused = bool(fused)
+        self.snap_capacity = int(snap_capacity if snap_capacity is not None
+                                 else 2 * max(tiers))
         self.sched = SlabScheduler(
             tiers[0], cfg.gcn_joints, cfg.gcn_in_channels,
             flush_frames=self.flush_frames,
             first_logit_delay=engine.stream_first_logit_delay(self.plans[0]),
-            policy=qos)
+            policy=qos,
+            snap_ring=self.snap_capacity if self.fused else None)
         self.capman: Optional[CapacityManager] = None
         if len(tiers) > 1:
             ccfg = capacity_config or CapacityConfig(tiers=tiers)
@@ -193,6 +218,21 @@ class GcnService:
         self._step = jax.jit(make_gcn_slab_step(cfg))
         self._snap_fn = jax.jit(engine.snapshot_slots)
         self._rest_fn = jax.jit(engine.restore_slots)
+        # the one-dispatch tick: slab and snapshot-ring pytrees are
+        # DONATED (argnums 1 and 8) — XLA updates them in place and the
+        # Python-side inputs die at the call; tick() must only ever pass
+        # buffers it owns (self.slabs / self._rings) and immediately
+        # rebind them to the outputs
+        self._fused_tick = jax.jit(make_gcn_fused_tick(cfg),
+                                   donate_argnums=(1, 8))
+        # per-stream on-device snapshot rings (fused path): ring rows are
+        # slot-shaped (S-independent), so one ring serves every capacity
+        # tier and rides through elastic migrations untouched
+        self._rings: Optional[Tuple] = None
+        if self.fused:
+            self._rings = tuple(
+                engine.init_snapshot_ring(s, self.snap_capacity)
+                for s in self._tier_slabs[tiers[0]])
         # the tier-migration pair fused into one jit: gather rows out of
         # the source slab, scatter into the (pristine) target slab
         self._migrate_fn = jax.jit(
@@ -204,10 +244,13 @@ class GcnService:
         self._sessions: Dict[int, SessionRequest] = {}
         self._records: Dict[int, SessionRecord] = {}
         self._snaps: Dict[int, Tuple] = {}    # sid -> per-stream snapshots
+                                              # (legacy tick path only)
         self._tick = 0
         self._missed_seen = 0                 # deadline drops already released
-        self._last_logits: Optional[np.ndarray] = None
-        self.wall_s = 0.0                     # serving time inside tick()
+        self._last_logits: Optional[Any] = None   # device array until forced
+        self.wall_host_s = 0.0                # host scheduling inside tick()
+        self.wall_device_s = 0.0              # forced-readback device waits
+        self.device_dispatches = 0            # jitted calls issued by tick()
         self.tier_ticks: Dict[int, int] = {S: 0 for S in tiers}
 
         if warm:
@@ -216,19 +259,38 @@ class GcnService:
     # -- construction helpers ------------------------------------------------
 
     def _warm(self) -> None:
-        """Compile the slab step for every tier (plus the preempt
-        gather/scatter pair) before traffic arrives — post-warmup, no
-        admission/hold/occupancy combination retraces within a tier."""
+        """Compile the active tick path for every tier (plus the preempt
+        gather/scatter pair on the legacy path) before traffic arrives —
+        post-warmup, no admission/hold/occupancy/event-count combination
+        retraces within a tier."""
         jnp, jax = self._jnp, self._jax
+        engine = self._engine
         V, C = self.cfg.gcn_joints, self.cfg.gcn_in_channels
         for S, slabs in self._tier_slabs.items():
             zf = jnp.zeros((S, V, C))
             zb = jnp.zeros((S,), bool)
+            # the no-event tick (fused and legacy paths alike) is the
+            # plain slab step
             _, wl = self._step(self.plans, slabs, zf, zb, zb, zb)
             jax.block_until_ready(wl)
-        if self.qos == "preempt":
-            # the preempt gather/scatter traces per tier shape — warm it
-            # at every tier so the first preemption after a grow is free
+            if self.fused:
+                # the fused event tick donates its slab/ring arguments, so
+                # warm it on throwaway copies — never on the pristine tier
+                # slabs or the live ring.  One trace per tier covers any
+                # event count: the order buffers are traced values of the
+                # static (max_events_for(S), 2) shape.
+                wslabs = tuple(jax.tree_util.tree_map(jnp.copy, s)
+                               for s in slabs)
+                wrings = tuple(engine.init_snapshot_ring(
+                    s, self.snap_capacity) for s in slabs)
+                zo = jnp.asarray(pad_event_orders([], max_events_for(S)))
+                out = self._fused_tick(self.plans, wslabs, zf, zb, zb, zb,
+                                       zo, zo, wrings)
+                jax.block_until_ready(out[1])
+        if self.qos == "preempt" and not self.fused:
+            # the legacy preempt gather/scatter traces per tier shape —
+            # warm it at every tier so the first preemption after a grow
+            # is free (the fused path carries its events in-dispatch)
             for slabs in self._tier_slabs.values():
                 w = tuple(self._snap_fn(s, jnp.asarray(0)) for s in slabs)
                 ws = tuple(self._rest_fn(s, jnp.asarray(0), x)
@@ -266,6 +328,14 @@ class GcnService:
     def now(self) -> int:
         """The service clock: index of the next tick to run."""
         return self._tick
+
+    @property
+    def wall_s(self) -> float:
+        """Total serving time inside ``tick()``: host scheduling
+        (``wall_host_s``) plus forced-readback device waits
+        (``wall_device_s``) — kept as a property for back-compat with the
+        old single counter."""
+        return self.wall_host_s + self.wall_device_s
 
     @property
     def capacity(self) -> int:
@@ -328,7 +398,7 @@ class GcnService:
                 sid=h.sid, state="done", frames_submitted=req.n_frames(),
                 frames_consumed=rec.frames, priority=req.priority,
                 logits=rec.logits, record=rec)
-        if any(m is req for m in self.sched.missed):
+        if h.sid in self.sched.missed_sids:      # O(1) sid index
             return SessionStatus(
                 sid=h.sid, state="missed", frames_submitted=req.n_frames(),
                 frames_consumed=0, priority=req.priority)
@@ -336,19 +406,18 @@ class GcnService:
             if slot is not None and slot.req is req:
                 state = ("active" if slot.rel < req.n_frames()
                          or not req.is_closed() else "draining")
-                logits = (None if self._last_logits is None
+                logits = (None if self._force_logits() is None
                           else np.asarray(self._last_logits[s]))
                 return SessionStatus(
                     sid=h.sid, state=state, frames_submitted=req.n_frames(),
                     frames_consumed=min(slot.rel, req.n_frames()),
                     priority=req.priority, logits=logits)
         # queued — either never admitted, or a preempted slot awaiting
-        # re-admission (which keeps its consumed-frame progress)
-        consumed = 0
-        for item in self.sched.queue:
-            if getattr(item, "req", item) is req:
-                consumed = min(getattr(item, "rel", 0), req.n_frames())
-                break
+        # re-admission (which keeps its consumed-frame progress); O(1)
+        # sid lookup instead of a queue scan
+        item = self.sched.queue.get(h.sid)
+        consumed = (min(getattr(item, "rel", 0), req.n_frames())
+                    if item is not None else 0)
         return SessionStatus(
             sid=h.sid, state="queued", frames_submitted=req.n_frames(),
             frames_consumed=consumed, priority=req.priority)
@@ -366,32 +435,93 @@ class GcnService:
 
     # -- the serving tick -----------------------------------------------------
 
+    def _force_logits(self) -> Optional[np.ndarray]:
+        """Force the pending tick's logits to host (no-op once forced).
+
+        The fused tick keeps ``_last_logits`` as a device array — a
+        future the host only waits on when someone actually reads it
+        (``poll``, a finishing session, ``metrics``).  The block is timed
+        into ``wall_device_s``: this is the forced-readback point that
+        separates device time from host scheduling time."""
+        if (self._last_logits is not None
+                and not isinstance(self._last_logits, np.ndarray)):
+            t0 = time.monotonic()
+            self._last_logits = np.asarray(self._last_logits)
+            self.wall_device_s += time.monotonic() - t0
+        return self._last_logits
+
     def tick(self) -> List[SessionRecord]:
         """Run one scheduler tick: capacity decision (elastic), QoS policy
-        + admissions, snapshot/restore orders, one jitted slab step for
-        all slots, drain accounting.  Returns the sessions that finished
-        this tick (their records are also kept for :meth:`poll`)."""
+        + admissions, snapshot/restore orders, one device dispatch for
+        all slots (the donated fused megakernel on event ticks, the plain
+        slab step on no-event ticks; or the legacy multi-dispatch
+        sequence when ``fused=False``), drain accounting.  Returns the sessions that
+        finished this tick (their records are also kept for
+        :meth:`poll`).
+
+        On the fused path the logits stay on device: the host queues the
+        dispatch and immediately resumes scheduling — the transfer is
+        only forced when a session finishes this tick, someone polls, or
+        metrics are read, so tick *t*'s device work overlaps tick
+        *t+1*'s host-side planning."""
         jnp = self._jnp
         t0 = time.monotonic()
+        dev0 = self.wall_device_s
         if self.capman is not None:
             target = self.capman.observe(
                 self.sched.busy(), len(self.sched.queue), self._tick)
             if target is not None:
                 self._migrate(target)
         tp = self.sched.tick_inputs(self._tick, t0)
-        for s, sid in tp.snapshot:          # capture before restore/step
-            self._snaps[sid] = tuple(
-                self._snap_fn(slab, jnp.asarray(s)) for slab in self.slabs)
-        for s, sid in tp.restore:
-            snaps = self._snaps.pop(sid)
-            self.slabs = tuple(
-                self._rest_fn(slab, jnp.asarray(s), sn)
-                for slab, sn in zip(self.slabs, snaps))
-        self.slabs, logits = self._step(
-            self.plans, self.slabs, jnp.asarray(tp.frames),
-            jnp.asarray(tp.valid), jnp.asarray(tp.reset),
-            jnp.asarray(tp.hold))
-        self._last_logits = np.asarray(logits)   # blocks until tick is done
+        if self.fused:
+            if tp.snapshot or tp.restore:
+                # event tick — one donated dispatch: snapshot gathers ->
+                # restore scatters -> reset/hold-masked slab step, all
+                # inside _fused_tick.  self.slabs/self._rings die at this
+                # call (donated) and are rebound to the outputs — never
+                # re-read the old references.
+                self.slabs, logits, self._rings = self._fused_tick(
+                    self.plans, self.slabs, jnp.asarray(tp.frames),
+                    jnp.asarray(tp.valid), jnp.asarray(tp.reset),
+                    jnp.asarray(tp.hold), jnp.asarray(tp.snap_order),
+                    jnp.asarray(tp.rest_order), self._rings)
+            else:
+                # no-event tick (the common case): the plain slab step is
+                # the same single dispatch minus the ring plumbing — the
+                # fused win here is skipping the per-tick readback, not
+                # the kernel shape
+                self.slabs, logits = self._step(
+                    self.plans, self.slabs, jnp.asarray(tp.frames),
+                    jnp.asarray(tp.valid), jnp.asarray(tp.reset),
+                    jnp.asarray(tp.hold))
+            self.device_dispatches += 1
+            self._last_logits = logits           # device array; forced lazily
+            # a session finishing this tick needs its logits row now —
+            # force the readback (timed as device wait) before drain
+            # accounting; otherwise leave the future pending
+            if any(slot is not None and not slot.held
+                   and slot.total is not None and slot.rel == slot.total - 1
+                   for slot in self.sched.slots):
+                self._force_logits()
+        else:
+            for s, sid in tp.snapshot:      # capture before restore/step
+                self._snaps[sid] = tuple(
+                    self._snap_fn(slab, jnp.asarray(s))
+                    for slab in self.slabs)
+                self.device_dispatches += len(self.slabs)
+            for s, sid in tp.restore:
+                snaps = self._snaps.pop(sid)
+                self.slabs = tuple(
+                    self._rest_fn(slab, jnp.asarray(s), sn)
+                    for slab, sn in zip(self.slabs, snaps))
+                self.device_dispatches += len(self.slabs)
+            self.slabs, logits = self._step(
+                self.plans, self.slabs, jnp.asarray(tp.frames),
+                jnp.asarray(tp.valid), jnp.asarray(tp.reset),
+                jnp.asarray(tp.hold))
+            self.device_dispatches += 1
+            self._last_logits = logits
+            self._force_logits()                 # legacy: synchronous tick
         done = self.sched.tick_outputs(self._tick, self._last_logits,
                                        time.monotonic())
         for rec in done:
@@ -404,7 +534,8 @@ class GcnService:
         self._missed_seen = len(self.sched.missed)
         self.tier_ticks[self.capacity] += 1
         self._tick += 1
-        self.wall_s += time.monotonic() - t0
+        self.wall_host_s += ((time.monotonic() - t0)
+                             - (self.wall_device_s - dev0))
         return done
 
     def run_until_idle(self, max_ticks: int = 100_000) -> int:
@@ -462,7 +593,11 @@ class GcnService:
         row shape merged into ``BENCH_sessions.json`` (fps, per-priority
         latency p50/p99, occupancy both ways, first-logit delay, QoS and
         elastic-capacity accounting) plus the completed
-        :class:`SessionRecord` list under ``"records"``."""
+        :class:`SessionRecord` list under ``"records"``.
+
+        Reading metrics forces any pending async logits first, so
+        ``wall_device_s`` settles before the row is built."""
+        self._force_logits()
         sched, wall = self.sched, self.wall_s
         recs = sched.completed
         lat = np.asarray([r.wall_finished - r.wall_admitted for r in recs])
@@ -506,6 +641,10 @@ class GcnService:
             "sessions": len(recs),
             "ticks": ticks,
             "wall_s": wall,
+            "wall_host_s": self.wall_host_s,
+            "wall_device_s": self.wall_device_s,
+            "tick_path": "fused" if self.fused else "legacy",
+            "device_dispatches": self.device_dispatches,
             "frames_per_s": sched.valid_frames / wall if wall > 0 else 0.0,
             "ticks_per_s": ticks / wall if wall > 0 else 0.0,
             "occupancy": occ_time,
@@ -559,6 +698,7 @@ def run_sessions(
     priorities: Optional[Sequence[int]] = None,
     capacity_tiers: Optional[Sequence[int]] = None,
     load: str = "poisson",
+    fused: bool = True,
 ) -> Dict:
     """Serve ``n_sessions`` generated skeleton sessions through a
     :class:`GcnService` with the two-stream (joint + bone) ensemble.
@@ -581,7 +721,7 @@ def run_sessions(
 
     tiers = tuple(capacity_tiers) if capacity_tiers else (slots,)
     svc = GcnService(cfg, backend=backend, qos=qos, capacity_tiers=tiers,
-                     quant=quant, seed=seed)
+                     quant=quant, seed=seed, fused=fused)
 
     if lengths is None:
         lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))

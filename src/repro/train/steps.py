@@ -151,6 +151,38 @@ def make_gcn_slab_step(cfg: ModelConfig) -> Callable:
     return slab_step
 
 
+def make_gcn_fused_tick(cfg: ModelConfig) -> Callable:
+    """One-dispatch multi-session serving tick over prebuilt ExecutionPlans.
+
+    Returns ``tick(plans, slabs, frames, valid, reset, hold, snap_order,
+    rest_order, rings) -> (slabs, logits, rings)`` — the fused form of
+    :func:`make_gcn_slab_step`: the tick's snapshot gathers, restore
+    scatters, admission resets, hold masking and the slab step execute as
+    a single jitted call per ensemble stream (engine.fused_tick), with
+    the snapshot captures living in preallocated on-device rings (one per
+    stream, ``engine.init_snapshot_ring``).  ``snap_order``/``rest_order``
+    are fixed-shape (E, 2) sentinel-padded event buffers shared by both
+    ensemble streams (joint + bone ride the same slot schedule).  Jit it
+    with ``donate_argnums=(1, 8)`` so the slab and ring pytrees update in
+    place; the caller must never re-read the donated inputs."""
+    from repro.core.agcn import engine
+    from repro.core.agcn.model import bone_stream
+
+    def fused_tick(plans, slabs, frames, valid, reset, hold,
+                   snap_order, rest_order, rings):
+        s0, logits, r0 = engine.fused_tick(
+            plans[0], slabs[0], frames, valid, reset, hold,
+            snap_order, rest_order, rings[0])
+        if len(plans) > 1:
+            s1, lb, r1 = engine.fused_tick(
+                plans[1], slabs[1], bone_stream(frames), valid, reset, hold,
+                snap_order, rest_order, rings[1])
+            return (s0, s1), 0.5 * (logits + lb), (r0, r1)
+        return (s0,), logits, (r0,)
+
+    return fused_tick
+
+
 def make_serve_step(cfg: ModelConfig) -> Callable:
     def serve_step(params, cache, batch):
         logits, new_cache = registry.serve_fn(params, batch, cache, cfg)

@@ -48,6 +48,26 @@ else
   trap 'rm -rf "$SMOKE_DIR"' EXIT
   python -m benchmarks.run --only kernels --smoke --out-dir "$SMOKE_DIR" > /dev/null
   test -s "$SMOKE_DIR/BENCH_kernels_bench.json"
+  # one-dispatch tick smoke: the throughput module's tick_fused axis must
+  # run the fused serving tick end-to-end (S=4, reference backend) and
+  # emit its rows; the tracked BENCH_throughput.json must carry the full
+  # fused-vs-legacy axis at the serving slot counts
+  python -m benchmarks.run --only throughput --smoke --backend reference \
+    --out-dir "$SMOKE_DIR" > /dev/null
+  python - "$SMOKE_DIR/BENCH_throughput.json" <<'EOF'
+import json, sys
+names = {r["name"] for r in json.load(open(sys.argv[1]))}
+for path, wl in (("fused", "fifo"), ("fused", "preempt"),
+                 ("legacy", "fifo"), ("legacy", "preempt")):
+    want = f"throughput/measured/tick_fused/reference/S4/{path}/{wl}"
+    assert want in names, f"smoke run missing {want}"
+names = {r["name"] for r in json.load(open("BENCH_throughput.json"))}
+for backend in ("reference", "pallas"):
+    for S in (16, 64, 256):
+        for path in ("fused", "legacy"):
+            want = f"throughput/measured/tick_fused/{backend}/S{S}/{path}/fifo"
+            assert want in names, f"tracked BENCH_throughput.json missing {want}"
+EOF
   # docs gates ride the full tier: broken intra-repo links, a public
   # docstring coverage regression in core/kernels/serving, or undeclared
   # public-API drift (docs/api_surface.txt) fail the build

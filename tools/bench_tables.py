@@ -47,6 +47,10 @@ def render(path: pathlib.Path) -> str:
                 extra += (f", {r.get('migrations_grow', 0)} grow / "
                           f"{r.get('migrations_shrink', 0)} shrink "
                           f"@ {r.get('migration_ms_mean', 0):.1f}ms")
+            if "wall_host_s" in r:   # one-dispatch tick rows split the wall
+                extra += (f", wall {r['wall_host_s']:.2f}s host + "
+                          f"{r['wall_device_s']:.2f}s device "
+                          f"({r.get('tick_path', 'fused')})")
             out.append(
                 f"| `{label}` | — | "
                 f"{r['sessions']} sessions / {r['slots']} slots, "
