@@ -22,11 +22,17 @@ Modes:
               arrivals, QoS policies (``--qos fifo|preempt|deadline``),
               and **elastic slot capacity** (``--capacity-tiers 2,4,8``:
               one pre-built slab per tier, hysteresis grow/shrink,
-              session migration via snapshot/restore).  Merges rows into
-              ``BENCH_sessions.json``:
+              session migration via snapshot/restore).  ``--mesh N``
+              shards the slab tick over an N-device 1-D batch mesh (on
+              CPU the fake-device flag is set automatically);
+              ``--replicas R`` additionally serves the load through a
+              :class:`repro.distributed.router.ReplicaRouter` over R
+              service replicas with periodic drain-and-rebalance.
+              Merges rows into ``BENCH_sessions.json``:
 
                   serve sessions --arch agcn-2s --reduced --slots 4 \\
-                      [--qos preempt] [--capacity-tiers 2,4,8 --load burst]
+                      [--qos preempt] [--capacity-tiers 2,4,8 --load burst] \\
+                      [--mesh 4] [--replicas 2]
 
   lm        — LM families: batched prefill + decode with the KV cache:
 
@@ -39,6 +45,7 @@ still parses, with a deprecation note."""
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -173,7 +180,8 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                        n_sessions: int = 0, rate: float = 0.0, seed: int = 0,
                        backends=("reference", "pallas"), qos: str = "fifo",
                        preempt_ratio: float = 0.25, deadline_slack: int = 25,
-                       capacity_tiers=None, load: str = "poisson"):
+                       capacity_tiers=None, load: str = "poisson",
+                       mesh: int = 0, replicas: int = 1):
     """Multi-session stream serving through :class:`repro.serving.GcnService`.
 
     One service per backend (two-stream ensemble) under the ``qos`` policy
@@ -184,9 +192,13 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
     across tiers via the engine's snapshot/restore; ``slots`` alone is a
     fixed-capacity run.  ``load`` picks the arrival process (``poisson``
     steady vs ``burst`` peaks-and-lulls — the elastic stress shape).
-    Returns the per-backend metrics dicts from
-    :func:`repro.serving.run_sessions` and merges them into
-    ``BENCH_sessions.json``."""
+    ``mesh > 1`` shards the slab tick over a 1-D device mesh (the row
+    gains ``mesh`` + ``collective_ms_per_tick``); ``replicas > 1`` also
+    runs the load through a :class:`~repro.distributed.router.
+    ReplicaRouter` and appends the merged routed row (``replicas`` +
+    ``rebalances`` axes).  Returns the metrics dicts from
+    :func:`repro.serving.run_sessions` (and the routed runs) and merges
+    them into ``BENCH_sessions.json``."""
     from repro.serving import run_sessions, write_bench
 
     cfg = get_config(arch, reduced=reduced)
@@ -201,8 +213,17 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                          mean_interarrival=mean_gap, backend=backend,
                          seed=seed, qos=qos, preempt_ratio=preempt_ratio,
                          deadline_slack=deadline_slack,
-                         capacity_tiers=capacity_tiers, load=load)
+                         capacity_tiers=capacity_tiers, load=load,
+                         mesh=mesh)
         results.append(r)
+        if replicas > 1:
+            from repro.distributed.router import run_routed_sessions
+            results.append(run_routed_sessions(
+                cfg, replicas=replicas, slots=slots, n_sessions=n,
+                mean_interarrival=mean_gap, backend=backend, seed=seed,
+                qos=qos, preempt_ratio=preempt_ratio,
+                deadline_slack=deadline_slack,
+                capacity_tiers=capacity_tiers, load=load))
     write_bench(results)
     return results
 
@@ -259,6 +280,23 @@ def _parse_tiers(spec: str):
     if not spec:
         return None
     return tuple(int(t) for t in spec.split(","))
+
+
+def _ensure_fake_devices(n: int) -> None:
+    """Make at least ``n`` host devices visible for ``--mesh n``.
+
+    Must run before jax's backend initializes (the flag is read once);
+    a user-provided ``--xla_force_host_platform_device_count`` wins.  If
+    the platform still comes up short, ``make_batch_mesh`` raises with
+    the same flag in the message."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n}"
+        + (f" {flags}" if flags else ""))
 
 
 def _add_common(ap: argparse.ArgumentParser) -> None:
@@ -320,6 +358,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--load", default="poisson", choices=("poisson", "burst"),
                    help="arrival process: steady poisson or bursty "
                         "peaks-and-lulls (the elastic stress shape)")
+    p.add_argument("--mesh", type=int, default=0,
+                   help="shard the slab tick over an N-device 1-D batch "
+                        "mesh (0/1 -> single device; on CPU the "
+                        "fake-device XLA flag is set automatically)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="also serve the load through a ReplicaRouter over "
+                        "R service replicas (adds the routed BENCH row)")
 
     p = sub.add_parser("lm", help="LM families: prefill + decode")
     _add_common(p)
@@ -367,7 +412,21 @@ def _print_sessions(results) -> None:
     for r in results:
         cap = (f" capacity={r['capacity']}" if r["capacity"] != "fixed"
                else "")
-        print(f"backend={r['backend']} [sessions qos={r['qos']}{cap} "
+        if r.get("replicas", 1) > 1:
+            # merged router row: totals + percentiles only (per-replica
+            # detail rides under "per_replica" in the BENCH row)
+            print(f"backend={r['backend']} [sessions routed "
+                  f"replicas={r['replicas']} qos={r['qos']}{cap}]: "
+                  f"{r['sessions']} sessions over "
+                  f"{r['replicas']}x{r['slots']} slots, "
+                  f"{r['frames_per_s']:.1f} frames/s aggregate, "
+                  f"occupancy {r['occupancy']*100:.0f}%, "
+                  f"latency p50={r['latency_ms_p50']:.0f}ms "
+                  f"p99={r['latency_ms_p99']:.0f}ms, "
+                  f"{r['rebalances']} rebalance moves")
+            continue
+        mesh = f" mesh={r['mesh']}" if r.get("mesh", 1) > 1 else ""
+        print(f"backend={r['backend']} [sessions{mesh} qos={r['qos']}{cap} "
               f"load={r['load']}]: "
               f"{r['sessions']} sessions over {r['slots']} slots, "
               f"{r['frames_per_s']:.1f} frames/s aggregate, "
@@ -396,6 +455,9 @@ def _print_sessions(results) -> None:
                   f"migration {r['migration_ms_mean']:.1f}ms mean, "
                   f"final capacity {r['capacity_final']}, "
                   f"tier ticks {r['tier_ticks']}")
+        if r.get("mesh", 1) > 1:
+            print(f"  sharded: {r['mesh']} devices, collective cost "
+                  f"{r['collective_ms_per_tick']:.2f}ms/tick")
     print("# merged BENCH_sessions.json")
 
 
@@ -429,13 +491,15 @@ def main(argv=None):
 
     if args.mode == "sessions":
         assert cfg.family == "gcn", f"{args.arch} is not a gcn-family arch"
+        _ensure_fake_devices(getattr(args, "mesh", 0))
         results = serve_gcn_sessions(
             args.arch, reduced=args.reduced, slots=args.slots,
             n_sessions=args.n_sessions, rate=args.rate, backends=backends,
             qos=args.qos, preempt_ratio=args.preempt_ratio,
             deadline_slack=args.deadline_slack,
             capacity_tiers=_parse_tiers(args.capacity_tiers),
-            load=args.load)
+            load=args.load, mesh=getattr(args, "mesh", 0),
+            replicas=getattr(args, "replicas", 1))
         _print_sessions(results)
         return
     if args.mode == "stream":

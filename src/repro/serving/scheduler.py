@@ -49,7 +49,8 @@ import heapq
 import json
 import os
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -343,9 +344,20 @@ class AdmissionQueue:
         """The head item (next admission) without removing it, or None."""
         return self._heap[0][-1] if self._heap else None
 
-    def peek_priority(self) -> int:
-        """Priority of the head item (the next admission)."""
+    def peek_priority(self) -> Optional[int]:
+        """Priority of the head item (the next admission), or None when
+        the queue is empty (guarded: an empty heap used to IndexError)."""
+        if not self._heap:
+            return None
         return -self._heap[0][0]
+
+    def remove(self, sid: int):
+        """Remove and return the queued item with session id ``sid`` (a
+        fresh request or a preempted slot awaiting re-admission), or None
+        if that session is not queued — the cross-replica drain pulls a
+        pinned session out of the admission queue here."""
+        dropped = self.drop_if(lambda it: self._req(it).sid == sid)
+        return dropped[0] if dropped else None
 
     def get(self, sid: int):
         """O(1) lookup by session id: the queued item (fresh request or
@@ -442,21 +454,38 @@ class SlabScheduler:
                  flush_frames: Callable[[int], int],
                  first_logit_delay: int,
                  policy: str = "fifo",
-                 snap_ring: Optional[int] = None):
+                 snap_ring: Optional[int] = None,
+                 retain: int = 1024):
         if policy not in QOS_POLICIES:
             raise ValueError(
                 f"unknown QoS policy {policy!r} (expected one of "
                 f"{QOS_POLICIES})")
+        if retain < 1:
+            raise ValueError(f"retain must be >= 1, got {retain}")
         self.slots: List[Optional[_Slot]] = [None] * slots
         self.joints, self.channels = joints, channels
         self.flush_frames = flush_frames
         self.first_logit_delay = first_logit_delay
         self.policy = policy
         self.queue = AdmissionQueue()
-        self.completed: List[SessionRecord] = []
-        self.missed: List[SessionRequest] = []   # deadline-policy casualties
+        # per-session bookkeeping is retention-bounded: a long-lived
+        # service must not pin every served session's record forever, so
+        # completed/missed keep only the most recent ``retain`` entries
+        # while the running aggregates below carry the lifetime totals
+        self.retain = int(retain)
+        self.completed: Deque[SessionRecord] = deque(maxlen=self.retain)
+        self.missed: Deque[SessionRequest] = deque()  # deadline casualties
         self.missed_sids: set = set()            # O(1) poll-side mirror
-        self.occupancy_samples: List[float] = []
+        self._occ_window: Deque[float] = deque(maxlen=self.retain)
+        self.n_completed = 0         # lifetime finished-session count
+        self.n_missed = 0            # lifetime deadline-miss count
+        self.occ_sum = 0.0           # lifetime sum of busy/S samples
+        self.occ_ticks = 0           # processed ticks (occupancy samples)
+        self.qwait_sum = 0           # lifetime sum of arrival->admit waits
+        # optional callback fired when the deadline policy drops a session
+        # (after its frames are released) — the service uses it to bound
+        # its own per-sid bookkeeping in lockstep
+        self.on_miss: Optional[Callable[[SessionRequest], None]] = None
         self.valid_frames = 0        # real (clip) frames fed across all slots
         self.preemptions = 0         # snapshot-evictions performed
         self.restores = 0            # preempted sessions re-admitted
@@ -473,6 +502,13 @@ class SlabScheduler:
         self._ring_free: List[int] = (
             list(range(int(snap_ring))) if snap_ring is not None else [])
         self._ring_of: Dict[int, int] = {}       # sid -> occupied ring row
+
+    @property
+    def occupancy_samples(self) -> List[float]:
+        """The most recent ``retain`` busy/S samples (one per processed
+        tick) as a plain list — the retention window behind the lifetime
+        ``occ_sum``/``occ_ticks`` aggregates."""
+        return list(self._occ_window)
 
     # -- admission -----------------------------------------------------------
 
@@ -522,8 +558,42 @@ class SlabScheduler:
 
     def _miss(self, item, tick: int) -> None:
         r = AdmissionQueue._req(item)
+        # the outcome is recorded; drop the frame payload immediately so a
+        # long-lived deadline service never pins dropped clips in memory
+        r.release_frames()
         self.missed.append(r)
         self.missed_sids.add(r.sid)
+        self.n_missed += 1
+        while len(self.missed) > self.retain:
+            old = self.missed.popleft()
+            self.missed_sids.discard(old.sid)
+        if self.on_miss is not None:
+            self.on_miss(r)
+
+    def sweep_expired(self, tick: int) -> int:
+        """Drop every queued or active session whose deadline has passed;
+        returns the number of sessions missed.  A no-op under non-deadline
+        policies, and idempotent within a tick — the service calls this
+        *before* the capacity manager observes demand (expired sessions
+        are not demand and must not trigger a grow), and
+        :meth:`tick_inputs` calls it again as part of the tick."""
+        if self.policy != "deadline":
+            return 0
+        n = 0
+        # queue sweep: expired sessions never reach a slot (only fresh
+        # requests can be queued here — preempted _Slots exist only under
+        # the mutually-exclusive preempt policy, so no stored snapshot can
+        # be orphaned by a drop)
+        for item in self.queue.drop_if(lambda it: self._expired(it, tick)):
+            self._miss(item, tick)
+            n += 1
+        # slot sweep: evict sessions whose deadline passed mid-service
+        for s, slot in enumerate(self.slots):
+            if slot is not None and self._expired(slot, tick):
+                self.slots[s] = None
+                self._miss(slot, tick)
+                n += 1
+        return n
 
     def _admit(self, s: int, item, tick: int, now: float,
                reset: np.ndarray, restore: List[Tuple[int, int]]) -> None:
@@ -559,18 +629,7 @@ class SlabScheduler:
         snapshot: List[Tuple[int, int]] = []
         restore: List[Tuple[int, int]] = []
 
-        if self.policy == "deadline":
-            # queue sweep: expired sessions never reach a slot (only fresh
-            # requests can be queued here — preempted _Slots exist only
-            # under the mutually-exclusive preempt policy, so no stored
-            # snapshot can be orphaned by a drop)
-            for item in self.queue.drop_if(lambda it: self._expired(it, tick)):
-                self._miss(item, tick)
-            # slot sweep: evict sessions whose deadline passed mid-service
-            for s, slot in enumerate(self.slots):
-                if slot is not None and self._expired(slot, tick):
-                    self.slots[s] = None
-                    self._miss(slot, tick)
+        self.sweep_expired(tick)
 
         for s in range(S):
             if self.slots[s] is None and self.queue:
@@ -633,7 +692,10 @@ class SlabScheduler:
                 # flush step here would inject zero padding mid-stream)
                 hold[s] = True
                 slot.held = True
-        self.occupancy_samples.append(self.busy() / S)
+        occ = self.busy() / S
+        self._occ_window.append(occ)
+        self.occ_sum += occ
+        self.occ_ticks += 1
         snap_order = rest_order = None
         if self.snap_ring is not None:
             snap_order, rest_order = self._ring_orders(snapshot, restore)
@@ -675,6 +737,33 @@ class SlabScheduler:
         return (pad_event_orders(snap_events, self.max_events),
                 pad_event_orders(rest_events, self.max_events))
 
+    def ring_adopt(self, sid: int) -> int:
+        """Allocate a snapshot-ring row for session ``sid`` and return it —
+        the import half of a cross-replica migration: the driver uploads
+        the session's host snapshot into this row, and the next admission
+        restores it exactly like a local preemption resume."""
+        if self.snap_ring is None:
+            raise RuntimeError("scheduler was built without a snapshot "
+                               "ring (fused path only)")
+        if not self._ring_free:
+            raise RuntimeError(
+                f"snapshot ring exhausted ({self.snap_ring} rows, "
+                f"{len(self._ring_of)} live snapshots) — raise the "
+                "service's snap_capacity")
+        row = self._ring_free.pop()
+        self._ring_of[sid] = row
+        return row
+
+    def ring_release(self, sid: int) -> int:
+        """Free session ``sid``'s snapshot-ring row and return it — the
+        export half of a cross-replica migration: the driver reads the row
+        out of the device ring before the allocator recycles it (device
+        execution follows dispatch order, so the read always lands before
+        any later snapshot reuses the row)."""
+        row = self._ring_of.pop(sid)
+        self._ring_free.append(row)
+        return row
+
     def tick_outputs(self, tick: int, logits: np.ndarray, now: float
                      ) -> List[SessionRecord]:
         """Advance slot clocks with this tick's logits; evict drained slots.
@@ -705,7 +794,9 @@ class SlabScheduler:
                     priority=slot.req.priority,
                     preemptions=slot.preemptions)
                 done.append(rec)
-                self.completed.append(rec)
+                self.completed.append(rec)   # bounded deque (maxlen=retain)
+                self.n_completed += 1
+                self.qwait_sum += rec.admitted - rec.arrival
                 self.slots[s] = None
             else:
                 slot.rel += 1
@@ -718,16 +809,20 @@ class SlabScheduler:
 
 def bench_key(row: Dict) -> Tuple:
     """Merge key of one ``BENCH_sessions.json`` row: ``(backend, slots,
-    qos, capacity, load)``.
+    qos, capacity, load, mesh, replicas)``.
 
     ``capacity`` distinguishes fixed-capacity runs (``"fixed"``, the
     default for rows written before the elastic axis existed) from elastic
     runs (``"elastic:2,4,8"`` — the tier tuple), and ``load`` the arrival
     process (``"poisson"`` default vs ``"burst"``) — without them an
     elastic run and its fixed baselines under the same (backend, slots,
-    qos) would collide and clobber each other."""
+    qos) would collide and clobber each other.  ``mesh`` (device-mesh
+    size, default 1 = single device) and ``replicas`` (router replica
+    count, default 1 = one service) are the distributed axes: a sharded
+    or routed run must not clobber its single-device baseline."""
     return (row.get("backend"), row.get("slots"), row.get("qos", "fifo"),
-            row.get("capacity", "fixed"), row.get("load", "poisson"))
+            row.get("capacity", "fixed"), row.get("load", "poisson"),
+            row.get("mesh", 1), row.get("replicas", 1))
 
 
 def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:

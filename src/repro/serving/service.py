@@ -125,6 +125,21 @@ class GcnService:
       snap_capacity    — snapshot-ring rows (fused path only): live
                          preempted sessions a tick can hold device state
                          for; defaults to ``2 * max(capacity_tiers)``.
+      mesh             — optional 1-D ``jax.sharding.Mesh``: the live
+                         slab, tier slabs and snapshot rings are placed
+                         under it (slot axis sharded across the mesh,
+                         BN stats and ring rows replicated) and every
+                         jitted entry point is compiled with matching
+                         output shardings, so one service tick runs
+                         SPMD across the mesh devices.  Every capacity
+                         tier must divide the mesh size.  None (default)
+                         = single-device service, unchanged.
+      retain_records   — bound on per-session host bookkeeping: only the
+                         most recent ``retain_records`` finished/missed
+                         sessions keep their request/record entries
+                         (lifetime totals live in running aggregates),
+                         so a service that stays up for days holds
+                         constant memory.
     """
 
     def __init__(self, cfg, *, backend: str = "reference", qos: str = "fifo",
@@ -135,7 +150,9 @@ class GcnService:
                  bn_stats: Optional[Any] = None,
                  x_calib: Optional[np.ndarray] = None,
                  warm: bool = True, fused: bool = True,
-                 snap_capacity: Optional[int] = None):
+                 snap_capacity: Optional[int] = None,
+                 mesh: Optional[Any] = None,
+                 retain_records: int = 1024):
         import jax
         import jax.numpy as jnp
 
@@ -148,10 +165,26 @@ class GcnService:
         tiers = tuple(sorted(int(t) for t in capacity_tiers))
         if not tiers:
             raise ValueError("capacity_tiers must name at least one tier")
+        if retain_records < 1:
+            raise ValueError(
+                f"retain_records must be >= 1, got {retain_records}")
+        self.mesh = mesh
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    f"GcnService expects a 1-D slot mesh, got axes "
+                    f"{mesh.axis_names}")
+            bad = [t for t in tiers if t % mesh.size]
+            if bad:
+                raise ValueError(
+                    f"capacity tiers {bad} do not divide the mesh size "
+                    f"{mesh.size} — the slot axis is sharded evenly "
+                    "across the mesh devices")
         self.cfg = cfg
         self.backend = backend
         self.qos = qos
         self.tiers = tiers
+        self.retain_records = int(retain_records)
         self._jax, self._jnp, self._engine = jax, jnp, engine
 
         # --- plans (joint [+ bone]) and their input-stream transforms -----
@@ -190,6 +223,39 @@ class GcnService:
             S: tuple(engine.init_session_slab(p, S, bn_stats=bs)
                      for p, bs in zip(self.plans, self.bn_stats))
             for S in tiers}
+
+        # --- mesh placement (distributed tier) ----------------------------
+        # per-slot leaves shard their leading slot axis across the 1-D
+        # mesh; plan-level BN stats (no slot axis) and snapshot-ring rows
+        # (ring axis, not slot axis) replicate.  One sharding tree per
+        # stream serves every tier — specs are shape-independent.
+        self._slab_shardings = None   # per-stream StreamState of shardings
+        self._ring_sharding = None    # per-stream ring pytree of shardings
+        self._row_sharding = None     # (S, ...) leaves, e.g. tick logits
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            row = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+            rep = NamedSharding(mesh, PartitionSpec())
+
+            def _slab_sharding(slab):
+                sh = jax.tree_util.tree_map(lambda _: row, slab)
+                sh.bn_stats = jax.tree_util.tree_map(
+                    lambda _: rep, slab.bn_stats)
+                return sh
+
+            self._slab_shardings = tuple(
+                _slab_sharding(s) for s in self._tier_slabs[tiers[0]])
+            # ring rows are slot-shaped snapshots (no slot axis) — same
+            # pytree structure as ``engine.snapshot_slots``, replicated
+            self._ring_sharding = tuple(
+                jax.tree_util.tree_map(
+                    lambda _: rep, engine.init_snapshot_ring(s, 1))
+                for s in self._tier_slabs[tiers[0]])
+            self._row_sharding = row
+            self._tier_slabs = {
+                S: tuple(jax.device_put(s, sh) for s, sh in
+                         zip(slabs, self._slab_shardings))
+                for S, slabs in self._tier_slabs.items()}
         # the *live* slab is a deep copy, never an alias of a tier entry:
         # the fused tick donates its slab argument (XLA reuses the buffers
         # in place and deletes them Python-side), and a donated alias
@@ -206,7 +272,12 @@ class GcnService:
             flush_frames=self.flush_frames,
             first_logit_delay=engine.stream_first_logit_delay(self.plans[0]),
             policy=qos,
-            snap_ring=self.snap_capacity if self.fused else None)
+            snap_ring=self.snap_capacity if self.fused else None,
+            retain=self.retain_records)
+        # deadline drops retire through the same bounded window as
+        # completions, so service-side bookkeeping stays constant under a
+        # miss-heavy load too
+        self.sched.on_miss = lambda req: self._retire(req.sid)
         self.capman: Optional[CapacityManager] = None
         if len(tiers) > 1:
             ccfg = capacity_config or CapacityConfig(tiers=tiers)
@@ -215,7 +286,17 @@ class GcnService:
             self.capman = CapacityManager(ccfg, start_tier=tiers[0])
 
         # --- jitted device entry points ------------------------------------
-        self._step = jax.jit(make_gcn_slab_step(cfg))
+        # under a mesh, every entry point pins its output shardings to the
+        # slab/ring placement above: inputs (always the live sharded
+        # buffers) and outputs then agree, so donation stays effective and
+        # the compiled signature never flip-flops between placements
+        step_out = fused_out = migrate_out = None
+        if mesh is not None:
+            step_out = (self._slab_shardings, self._row_sharding)
+            fused_out = (self._slab_shardings, self._row_sharding,
+                         self._ring_sharding)
+            migrate_out = self._slab_shardings[0]
+        self._step = jax.jit(make_gcn_slab_step(cfg), out_shardings=step_out)
         self._snap_fn = jax.jit(engine.snapshot_slots)
         self._rest_fn = jax.jit(engine.restore_slots)
         # the one-dispatch tick: slab and snapshot-ring pytrees are
@@ -224,7 +305,8 @@ class GcnService:
         # buffers it owns (self.slabs / self._rings) and immediately
         # rebind them to the outputs
         self._fused_tick = jax.jit(make_gcn_fused_tick(cfg),
-                                   donate_argnums=(1, 8))
+                                   donate_argnums=(1, 8),
+                                   out_shardings=fused_out)
         # per-stream on-device snapshot rings (fused path): ring rows are
         # slot-shaped (S-independent), so one ring serves every capacity
         # tier and rides through elastic migrations untouched
@@ -233,11 +315,24 @@ class GcnService:
             self._rings = tuple(
                 engine.init_snapshot_ring(s, self.snap_capacity)
                 for s in self._tier_slabs[tiers[0]])
+            if mesh is not None:
+                self._rings = tuple(
+                    jax.device_put(r, sh)
+                    for r, sh in zip(self._rings, self._ring_sharding))
         # the tier-migration pair fused into one jit: gather rows out of
         # the source slab, scatter into the (pristine) target slab
         self._migrate_fn = jax.jit(
             lambda src, dst, old_idx, new_idx: engine.restore_slots(
-                dst, new_idx, engine.snapshot_slots(src, old_idx)))
+                dst, new_idx, engine.snapshot_slots(src, old_idx)),
+            out_shardings=migrate_out)
+        if mesh is not None:
+            # every dispatch runs inside the mesh's axis-rule scope so the
+            # engine's logical "batch" constraints resolve at trace time
+            self._step = self._under_mesh(self._step)
+            self._fused_tick = self._under_mesh(self._fused_tick)
+            self._migrate_fn = self._under_mesh(self._migrate_fn)
+            self._snap_fn = self._under_mesh(self._snap_fn)
+            self._rest_fn = self._under_mesh(self._rest_fn)
 
         # --- session bookkeeping -------------------------------------------
         self._next_sid = 0
@@ -245,8 +340,12 @@ class GcnService:
         self._records: Dict[int, SessionRecord] = {}
         self._snaps: Dict[int, Tuple] = {}    # sid -> per-stream snapshots
                                               # (legacy tick path only)
+        # retirement window: finished/missed sids in order; once more than
+        # retain_records sessions have retired after one, its request/
+        # record entries are dropped (lifetime totals live in the
+        # scheduler's running aggregates)
+        self._retired: deque = deque()
         self._tick = 0
-        self._missed_seen = 0                 # deadline drops already released
         self._last_logits: Optional[Any] = None   # device array until forced
         self.wall_host_s = 0.0                # host scheduling inside tick()
         self.wall_device_s = 0.0              # forced-readback device waits
@@ -257,6 +356,36 @@ class GcnService:
             self._warm()
 
     # -- construction helpers ------------------------------------------------
+
+    def _under_mesh(self, fn):
+        """Wrap a jitted entry point so every call (hence its trace) runs
+        inside the mesh's logical-axis rule scope — the engine's
+        ``constrain(x, "batch", ...)`` hints then resolve onto the service
+        mesh and the step compiles SPMD.  Only applied when ``mesh`` is
+        set; donation semantics pass straight through."""
+        import functools
+
+        from repro.distributed.sharding import axis_rules
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with axis_rules(self.mesh):
+                return fn(*args, **kwargs)
+
+        return wrapped
+
+    def _retire(self, sid: int) -> None:
+        """Enter ``sid`` into the bounded retirement window; the oldest
+        retiree beyond ``retain_records`` loses its host-side bookkeeping
+        (request, record, legacy snapshot, missed-sid mirror) — its
+        outcome already lives in the lifetime aggregates."""
+        self._retired.append(sid)
+        while len(self._retired) > self.retain_records:
+            old = self._retired.popleft()
+            self._sessions.pop(old, None)
+            self._records.pop(old, None)
+            self._snaps.pop(old, None)
+            self.sched.missed_sids.discard(old)
 
     def _warm(self) -> None:
         """Compile the active tick path for every tier (plus the preempt
@@ -283,6 +412,12 @@ class GcnService:
                                for s in slabs)
                 wrings = tuple(engine.init_snapshot_ring(
                     s, self.snap_capacity) for s in slabs)
+                if self.mesh is not None:
+                    # match the live rings' placement so warmup compiles
+                    # the same input signature traffic will use
+                    wrings = tuple(
+                        jax.device_put(r, sh)
+                        for r, sh in zip(wrings, self._ring_sharding))
                 zo = jnp.asarray(pad_event_orders([], max_events_for(S)))
                 out = self._fused_tick(self.plans, wslabs, zf, zb, zb, zb,
                                        zo, zo, wrings)
@@ -389,8 +524,16 @@ class GcnService:
         latency and the final record becomes available via :meth:`poll`."""
         self._req(h).close()
 
-    def poll(self, h: SessionHandle) -> SessionStatus:
-        """Non-blocking status: state, progress and the latest logits."""
+    def poll(self, h: SessionHandle, *, wait: bool = False) -> SessionStatus:
+        """Non-blocking status: state, progress and the latest logits.
+
+        For an active/draining session the default returns the logits of
+        the most recent *forced* tick — possibly ``None`` right after a
+        tick whose async readback is still pending — so a client polling
+        every tick costs no device sync (the fused path's readback
+        overlap survives the polling).  ``wait=True`` forces the pending
+        readback first (the wait is timed into ``wall_device_s``),
+        guaranteeing the logits reflect the latest tick."""
         req = self._req(h)
         rec = self._records.get(h.sid)
         if rec is not None:
@@ -406,8 +549,11 @@ class GcnService:
             if slot is not None and slot.req is req:
                 state = ("active" if slot.rel < req.n_frames()
                          or not req.is_closed() else "draining")
-                logits = (None if self._force_logits() is None
-                          else np.asarray(self._last_logits[s]))
+                if wait:
+                    self._force_logits()
+                logits = (np.asarray(self._last_logits[s])
+                          if isinstance(self._last_logits, np.ndarray)
+                          else None)
                 return SessionStatus(
                     sid=h.sid, state=state, frames_submitted=req.n_frames(),
                     frames_consumed=min(slot.rel, req.n_frames()),
@@ -428,10 +574,32 @@ class GcnService:
 
     def advance_clock(self, tick: int) -> None:
         """Fast-forward an idle service to ``tick`` (Poisson lulls cost no
-        compute; occupancy accounting weights them as empty)."""
+        compute; occupancy accounting weights them as empty).
+
+        The skipped gap is fed to the elastic capacity manager as empty
+        demand — enough observations to walk the tier ladder to the
+        bottom, followed by **one** physical migration — so a long lull
+        shrinks the slab and the first post-lull tick runs at bottom-tier
+        cost (an idle elastic service used to stay pinned at whatever
+        tier the last burst grew it to)."""
         if not self.idle():
             raise ValueError("cannot fast-forward a busy service")
-        self._tick = max(self._tick, int(tick))
+        tick = int(tick)
+        if self.capman is not None and tick > self._tick:
+            cc = self.capman.config
+            # worst case one full ladder walk: each rung needs its shrink
+            # patience plus the post-resize cooldown before the next
+            budget = len(self.tiers) * (cc.shrink_patience + cc.cooldown + 1)
+            start = self.capman.capacity
+            t = self._tick
+            while (t < tick and budget > 0
+                   and self.capman.capacity > self.tiers[0]):
+                self.capman.observe(0, 0, t)
+                t += 1
+                budget -= 1
+            if self.capman.capacity != start:
+                self._migrate(self.capman.capacity)
+        self._tick = max(self._tick, tick)
 
     # -- the serving tick -----------------------------------------------------
 
@@ -468,6 +636,10 @@ class GcnService:
         t0 = time.monotonic()
         dev0 = self.wall_device_s
         if self.capman is not None:
+            # sweep deadline-expired sessions *before* the capacity
+            # manager looks: expired slots/queue entries are not demand,
+            # and counting them used to trigger spurious grows
+            self.sched.sweep_expired(self._tick)
             target = self.capman.observe(
                 self.sched.busy(), len(self.sched.queue), self._tick)
             if target is not None:
@@ -529,9 +701,9 @@ class GcnService:
             # the record holds the outcome; drop the frame payload so a
             # long-lived service doesn't pin every served clip in memory
             self._sessions[rec.sid].release_frames()
-        for req in self.sched.missed[self._missed_seen:]:
-            req.release_frames()
-        self._missed_seen = len(self.sched.missed)
+            self._retire(rec.sid)
+        # (deadline misses release + retire through the scheduler's
+        # on_miss hook the moment they are swept)
         self.tier_ticks[self.capacity] += 1
         self._tick += 1
         self.wall_host_s += ((time.monotonic() - t0)
@@ -586,25 +758,123 @@ class GcnService:
         if self.capman is not None and self.capman.events:
             self.capman.events[-1].wall_ms = (time.monotonic() - t0) * 1e3
 
+    # -- cross-replica migration ----------------------------------------------
+
+    def export_session(self, h: SessionHandle) -> Dict:
+        """Drain one live session out of this service so another replica
+        can adopt it — the router's rebalance primitive.
+
+        Returns a host-side package: the session's scheduler item (the
+        request, or the in-flight slot bookkeeping) plus per-stream numpy
+        snapshots of its device state (``engine.snapshot_slots`` shape;
+        None when the session was never admitted and has no device
+        state).  The session stops existing here: its slot/queue entry
+        and per-sid bookkeeping are dropped, bystander slots untouched.
+        Finished or missed sessions cannot be exported.  The locked
+        parity invariant (tests/test_distributed.py): exporting at any
+        tick and resuming via :meth:`import_session` on another replica
+        reproduces the uninterrupted run's logits ≤1e-3, and bystanders
+        on both replicas are bit-identical."""
+        jax, jnp = self._jax, self._jnp
+        req = self._req(h)
+        sid = h.sid
+        if sid in self._records or sid in self.sched.missed_sids:
+            raise ValueError(
+                f"session {sid} already finished — nothing to export")
+        item: Any = None
+        snaps: Optional[Tuple] = None
+        for s, slot in enumerate(self.sched.slots):
+            if slot is not None and slot.req is req:
+                # active: its live state is slab row s — same gather as a
+                # preemption capture, then the slot is freed (admission
+                # reset zeroes the stale row before reuse)
+                snaps = tuple(
+                    jax.device_get(self._snap_fn(slab, jnp.asarray(s)))
+                    for slab in self.slabs)
+                self.sched.slots[s] = None
+                item = slot
+                break
+        if item is None:
+            item = self.sched.queue.remove(sid)
+            if item is None:
+                raise ValueError(f"session {sid} is in no exportable state")
+            if item is not req:
+                # a preempted slot awaiting re-admission: its device state
+                # is a ring row (fused) or a host snapshot tuple (legacy)
+                if self.fused:
+                    row = self.sched.ring_release(sid)
+                    snaps = tuple(
+                        jax.device_get(jax.tree_util.tree_map(
+                            lambda leaf: leaf[row], ring))
+                        for ring in self._rings)
+                else:
+                    snaps = tuple(jax.device_get(sn)
+                                  for sn in self._snaps.pop(sid))
+        self._sessions.pop(sid, None)
+        return {"item": item, "snaps": snaps}
+
+    def import_session(self, package: Dict) -> SessionHandle:
+        """Adopt a session exported from another replica.
+
+        The package's scheduler item re-enters the admission queue under
+        a fresh local sid (the handle returned here supersedes the
+        origin replica's).  A package carrying device snapshots uploads
+        them first — into a snapshot-ring row (fused) or the host
+        snapshot table (legacy) — so the next admission restores the
+        session exactly like a local preemption resume: same ring
+        phases, same block clocks, same running pool."""
+        jax, jnp = self._jax, self._jnp
+        item = package["item"]
+        snaps = package["snaps"]
+        req = item if isinstance(item, SessionRequest) else item.req
+        sid = self._next_sid
+        self._next_sid += 1
+        req.sid = sid
+        self._sessions[sid] = req
+        if snaps is not None:
+            if self.fused:
+                row = self.sched.ring_adopt(sid)
+                self._rings = tuple(
+                    jax.tree_util.tree_map(
+                        lambda r, sv: r.at[row].set(jnp.asarray(sv, r.dtype)),
+                        ring, sn)
+                    for ring, sn in zip(self._rings, snaps))
+                if self.mesh is not None:
+                    # keep the rings on their replicated mesh placement so
+                    # the fused tick's compiled signature never changes
+                    self._rings = tuple(
+                        jax.device_put(r, sh)
+                        for r, sh in zip(self._rings, self._ring_sharding))
+            else:
+                self._snaps[sid] = tuple(snaps)
+        self.sched.queue.push(item)
+        return SessionHandle(sid=sid)
+
     # -- metrics --------------------------------------------------------------
 
-    def metrics(self) -> Dict:
+    def metrics(self, *, keep_records: Optional[int] = None) -> Dict:
         """Aggregate serving metrics over everything served so far — the
         row shape merged into ``BENCH_sessions.json`` (fps, per-priority
         latency p50/p99, occupancy both ways, first-logit delay, QoS and
-        elastic-capacity accounting) plus the completed
-        :class:`SessionRecord` list under ``"records"``.
+        elastic-capacity accounting) plus recent completed
+        :class:`SessionRecord`\\ s under ``"records"``.
+
+        Totals (``sessions``, ``deadline_missed``, occupancy, mean queue
+        wait) come from lifetime running aggregates; percentile fields are
+        computed over the retention window (the most recent
+        ``retain_records`` completions).  ``keep_records`` bounds the
+        returned record list further (``0`` drops it entirely — the
+        long-lived-service polling shape); None returns the whole window.
 
         Reading metrics forces any pending async logits first, so
         ``wall_device_s`` settles before the row is built."""
         self._force_logits()
         sched, wall = self.sched, self.wall_s
-        recs = sched.completed
+        recs = list(sched.completed)
         lat = np.asarray([r.wall_finished - r.wall_admitted for r in recs])
         first = np.asarray([r.wall_first_logit - r.wall_admitted
                             for r in recs if r.wall_first_logit >= 0])
         no_first = sum(r.wall_first_logit < 0 for r in recs)
-        qwait = np.asarray([r.admitted - r.arrival for r in recs], np.float64)
         # per-class latency, both anchors: service time (admission→finish,
         # wall ms) and end-to-end (arrival→finish, scheduler ticks — queue
         # wait and preemption requeues included, which is where the QoS
@@ -623,22 +893,23 @@ class GcnService:
                 "e2e_p50_ticks": float(np.percentile(pt, 50)),
                 "e2e_p99_ticks": float(np.percentile(pt, 99)),
             }
-        n_missed = len(sched.missed)
+        n_missed = sched.n_missed
         ticks = self._tick
-        # occupancy_samples are busy/S on *processed* ticks only; the true
-        # time-weighted occupancy counts fast-forwarded idle gaps as zero
-        # (ticks spans the whole serving window, gaps included)
-        occ_busy = float(np.mean(sched.occupancy_samples)
-                         if sched.occupancy_samples else 0.0)
-        occ_time = float(np.sum(sched.occupancy_samples) / max(ticks, 1))
+        # occ_sum/occ_ticks are lifetime aggregates over *processed* ticks
+        # only; the true time-weighted occupancy counts fast-forwarded
+        # idle gaps as zero (ticks spans the whole serving window, gaps
+        # included)
+        occ_busy = float(sched.occ_sum / max(sched.occ_ticks, 1))
+        occ_time = float(sched.occ_sum / max(ticks, 1))
         events = self.capman.events if self.capman is not None else []
         out = {
             "backend": self.backend,
             "slots": self.tiers[0],
+            "mesh": self.mesh.size if self.mesh is not None else 1,
             "qos": self.qos,
             "capacity": ("fixed" if len(self.tiers) == 1 else
                          "elastic:" + ",".join(str(t) for t in self.tiers)),
-            "sessions": len(recs),
+            "sessions": sched.n_completed,
             "ticks": ticks,
             "wall_s": wall,
             "wall_host_s": self.wall_host_s,
@@ -658,13 +929,14 @@ class GcnService:
                                    if len(first) else 0.0),
             "first_logit_frames": self.first_logit_delay,
             "sessions_no_first_logit": int(no_first),
-            "queue_wait_ticks_mean": (float(qwait.mean())
-                                      if len(qwait) else 0.0),
+            "queue_wait_ticks_mean": (sched.qwait_sum / sched.n_completed
+                                      if sched.n_completed else 0.0),
             "preemptions": sched.preemptions,
             "restores": sched.restores,
             "deadline_missed": n_missed,
-            "deadline_miss_rate": (n_missed / (n_missed + len(recs))
-                                   if (n_missed + len(recs)) else 0.0),
+            "deadline_miss_rate": (
+                n_missed / (n_missed + sched.n_completed)
+                if (n_missed + sched.n_completed) else 0.0),
             "capacity_final": self.capacity,
             "migrations": len(events),
             "migrations_grow": sum(e.new > e.old for e in events),
@@ -672,7 +944,8 @@ class GcnService:
             "migration_ms_mean": (float(np.mean([e.wall_ms for e in events]))
                                   if events else 0.0),
             "tier_ticks": {str(S): n for S, n in self.tier_ticks.items()},
-            "records": recs,
+            "records": (recs if keep_records is None
+                        else recs[len(recs) - min(keep_records, len(recs)):]),
         }
         return out
 
@@ -699,6 +972,7 @@ def run_sessions(
     capacity_tiers: Optional[Sequence[int]] = None,
     load: str = "poisson",
     fused: bool = True,
+    mesh: int = 0,
 ) -> Dict:
     """Serve ``n_sessions`` generated skeleton sessions through a
     :class:`GcnService` with the two-stream (joint + bone) ensemble.
@@ -714,14 +988,20 @@ def run_sessions(
     policy — same seed, same labels, so a fifo run baselines the preempt
     run directly; under ``qos="deadline"`` each session's completion
     deadline is its minimal service time (clip + flush) plus
-    ``deadline_slack`` ticks past arrival.  Returns the
+    ``deadline_slack`` ticks past arrival.  ``mesh`` > 1 runs the slab
+    sharded across that many devices (a 1-D batch mesh; the row gains a
+    ``collective_ms_per_tick`` estimate).  Returns the
     :meth:`GcnService.metrics` dict (also the row merged into
     ``BENCH_sessions.json`` by ``serve sessions``)."""
     from repro.data.pipeline import DataConfig, skeleton_batches
 
+    mesh_obj = None
+    if mesh and mesh > 1:
+        from repro.distributed.serving import make_batch_mesh
+        mesh_obj = make_batch_mesh(mesh)
     tiers = tuple(capacity_tiers) if capacity_tiers else (slots,)
     svc = GcnService(cfg, backend=backend, qos=qos, capacity_tiers=tiers,
-                     quant=quant, seed=seed, fused=fused)
+                     quant=quant, seed=seed, fused=fused, mesh=mesh_obj)
 
     if lengths is None:
         lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))
@@ -771,4 +1051,7 @@ def run_sessions(
 
     out = svc.metrics()          # "slots" = the service's (sorted) base tier
     out["load"] = load
+    if mesh_obj is not None:
+        from repro.distributed.serving import collective_cost_ms
+        out["collective_ms_per_tick"] = collective_cost_ms(svc)
     return out

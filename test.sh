@@ -15,6 +15,11 @@
 #                       repro.core.agcn.engine must match the checked-in
 #                       docs/api_surface.txt (tools/check_api.py --update
 #                       regenerates it on intentional changes)
+#   ./test.sh --dist    distributed tier — tests/test_distributed.py under
+#                       XLA_FLAGS=--xla_force_host_platform_device_count=4
+#                       (mesh-sharded slab parity, cross-replica migration
+#                       parity, router pinning/rebalance units); the full
+#                       tier runs it too
 # Extra args pass through to pytest (e.g. ./test.sh --fast -k streaming).
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -24,16 +29,27 @@ export JAX_PLATFORMS=cpu
 
 FAST=0
 DOCS=0
+DIST=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --fast) FAST=1 ;;
     --docs) DOCS=1 ;;
+    --dist) DIST=1 ;;
     *) ARGS+=("$a") ;;
   esac
 done
 
-if [ "$DOCS" = 1 ]; then
+run_dist() {
+  # 4 fake host devices make the 1-D batch mesh real on CPU; the flag must
+  # reach a *fresh* interpreter before jax initialises its backend
+  XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -x -q tests/test_distributed.py ${ARGS[@]+"${ARGS[@]}"}
+}
+
+if [ "$DIST" = 1 ]; then
+  run_dist
+elif [ "$DOCS" = 1 ]; then
   python tools/check_docs.py
   python tools/check_api.py
 elif [ "$FAST" = 1 ]; then
@@ -67,6 +83,20 @@ for backend in ("reference", "pallas"):
         for path in ("fused", "legacy"):
             want = f"throughput/measured/tick_fused/{backend}/S{S}/{path}/fifo"
             assert want in names, f"tracked BENCH_throughput.json missing {want}"
+EOF
+  # distributed tier rides the full tier (a separate interpreter: the
+  # fake-device flag only takes effect before jax's backend initialises)
+  run_dist
+  # the tracked BENCH_sessions.json must carry the distributed axes: a
+  # mesh-sharded row with its collective cost and a routed multi-replica
+  # row with its rebalance count
+  python - <<'EOF'
+import json
+rows = json.load(open("BENCH_sessions.json"))
+assert any(r.get("mesh", 1) > 1 and "collective_ms_per_tick" in r
+           for r in rows), "no mesh-sharded row in BENCH_sessions.json"
+assert any(r.get("replicas", 1) > 1 and "rebalances" in r
+           for r in rows), "no routed-replica row in BENCH_sessions.json"
 EOF
   # docs gates ride the full tier: broken intra-repo links, a public
   # docstring coverage regression in core/kernels/serving, or undeclared

@@ -250,3 +250,36 @@ def test_queue_sid_index_tracks_membership():
     dropped = q.drop_if(lambda it: it.sid == 4)
     assert [d.sid for d in dropped] == [4] and q.get(4) is None
     assert len(q) == 3 and all(q.get(i) is not None for i in (0, 2))
+
+
+def test_poll_async_default_never_forces_readback(params, prune_plan):
+    """Regression: poll() used to force the pending tick's logits to host
+    on every call, so a polling client serialized the fused pipeline.
+    The default poll is now async — mid-clip polls return logits=None and
+    leave ``_last_logits`` as a device future — and only ``wait=True``
+    (or a finishing session) pays the readback, which lands in the
+    wall_device_s / device_dispatches accounting."""
+    plan, bn = _plan_and_bn(params, prune_plan, "reference")
+    svc = GcnService(CFG, plans=(plan,), bn_stats=(bn,), capacity_tiers=(2,),
+                     fused=True)
+    rng = np.random.default_rng(13)
+    h = svc.open_session()
+    svc.submit_clip(h, rng.standard_normal((20, V, C)).astype(np.float32))
+    for _ in range(4):                    # a polling client, every tick
+        svc.tick()
+        st = svc.poll(h)
+        assert st.state == "active" and st.logits is None
+        # the tick's logits are still an un-forced device future
+        assert not isinstance(svc._last_logits, np.ndarray)
+    wd0 = svc.wall_device_s
+    st = svc.poll(h, wait=True)           # opt-in sync point
+    assert isinstance(st.logits, np.ndarray)
+    assert isinstance(svc._last_logits, np.ndarray)
+    assert svc.wall_device_s >= wd0
+    # once forced, further async polls read the host buffer for free
+    assert svc.poll(h).logits is not None
+    svc.run_until_idle()
+    m = svc.metrics()
+    assert m["device_dispatches"] == m["ticks"]   # polling added none
+    assert svc.poll(h).state == "done"
+    assert np.isfinite(svc.poll(h).logits).all()

@@ -161,7 +161,8 @@ def test_poll_states_and_errors(params):
     svc.tick()
     svc.tick()
     assert svc.poll(h0).state == "draining"
-    assert svc.poll(h0).logits is not None
+    # default poll is async (no forced readback); wait=True syncs
+    assert svc.poll(h0, wait=True).logits is not None
     with pytest.raises(ValueError):
         svc.submit(h0, clip[0])                # closed stream
     with pytest.raises(ValueError):
@@ -395,7 +396,8 @@ def test_write_bench_elastic_rows_do_not_collide(tmp_path):
     assert rows[0] == legacy
     assert rows[1]["capacity"] == "elastic:2,4,8"
     assert "records" not in rows[1]
-    assert bench_key(legacy) == ("reference", 2, "fifo", "fixed", "poisson")
+    assert bench_key(legacy) == ("reference", 2, "fifo", "fixed", "poisson",
+                                 1, 1)
     assert bench_key(elastic) != bench_key(fixed_burst) != bench_key(legacy)
     # replace just the elastic row
     write_bench([{**elastic, "frames_per_s": 311.0}], path)
@@ -455,3 +457,98 @@ def test_api_surface_gate_matches_checked_in_snapshot():
         assert surface == check_api.build_surface()
     finally:
         sys.path.pop(0)
+
+
+# ------------------------------------------- long-lived-service bugfixes
+
+def test_deadline_expired_queue_never_grows_capacity(params):
+    """Regression: under qos="deadline" the capacity manager used to see
+    queued-but-already-expired sessions as demand and grow a tier for
+    work it would immediately shed.  Expired sessions are swept *before*
+    the demand observation, so an expired-heavy queue leaves capacity at
+    the bottom tier with zero resize events."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    bn = engine.collect_bn_stats(
+        plan, jax.random.normal(jax.random.PRNGKey(1),
+                                (2, CFG.gcn_frames, V, C)))
+    svc = GcnService(CFG, plans=(plan,), bn_stats=(bn,), qos="deadline",
+                     capacity_tiers=(2, 4), capacity_config=ELASTIC_CCFG)
+    clip = np.zeros((6, V, C), np.float32)
+    live = [svc.open_session(deadline=10_000) for _ in range(2)]
+    dead = [svc.open_session(deadline=-1) for _ in range(4)]  # expired at 0
+    for h in live + dead:
+        svc.submit_clip(h, clip)
+    svc.run_until_idle()
+    assert svc.capman.events == []                # no spurious grow
+    assert svc.capacity == 2
+    m = svc.metrics()
+    assert m["sessions"] == 2 and m["deadline_missed"] == 4
+    for h in live:
+        assert svc.poll(h).state == "done"
+    for h in dead:
+        assert svc.poll(h).state == "missed"
+
+
+def test_advance_clock_idle_lull_shrinks_capacity(params):
+    """Regression: an idle elastic service never saw shrink ticks (the
+    capacity manager only observed inside tick()), so a traffic lull left
+    it parked at the top tier forever.  advance_clock feeds the skipped
+    ticks to the capacity manager, walks the ladder down and migrates
+    once — capacity returns to the bottom tier before the next arrival."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    bn = engine.collect_bn_stats(
+        plan, jax.random.normal(jax.random.PRNGKey(1),
+                                (2, CFG.gcn_frames, V, C)))
+    # shrink_patience=6 > the drain tail, so the busy phase ends still
+    # parked at the top tier — only the lull can walk it back down
+    ccfg = CapacityConfig(tiers=(2, 4), grow_patience=1,
+                          shrink_patience=6, cooldown=3)
+    svc = GcnService(CFG, plans=(plan,), bn_stats=(bn,),
+                     capacity_tiers=(2, 4), capacity_config=ccfg)
+    rng = np.random.default_rng(6)
+    arrivals = [(0, rng.standard_normal((8, V, C)).astype(np.float32), {})
+                for _ in range(4)]
+    _drive(svc, arrivals)                    # burst grows 2 -> 4
+    assert any(e.new > e.old for e in svc.capman.events)
+    assert svc.capacity == 4                 # still at the top tier
+    svc.advance_clock(svc.now + 200)         # the lull
+    assert svc.capacity == 2                 # walked back down
+    assert svc.now >= 200
+    # still serves correctly afterwards at the bottom tier
+    h = svc.open_session()
+    svc.submit_clip(h, arrivals[0][1])
+    svc.run_until_idle()
+    np.testing.assert_array_equal(svc.poll(h).logits,
+                                  _drive(GcnService(CFG, plans=(plan,),
+                                                    bn_stats=(bn,),
+                                                    capacity_tiers=(2,)),
+                                         arrivals[:1])[0])
+
+
+def test_service_bookkeeping_bounded_and_keep_records(params):
+    """Regression: a long-lived service accumulated per-session dicts and
+    full record lists without bound.  With retain_records=3, serving 9
+    sessions leaves every host map trimmed to the retention bound, while
+    the lifetime aggregates in metrics() still count all 9;
+    metrics(keep_records=1) caps the returned record list."""
+    plan = engine.build_execution_plan(params, CFG, backend="reference")
+    bn = engine.collect_bn_stats(
+        plan, jax.random.normal(jax.random.PRNGKey(1),
+                                (2, CFG.gcn_frames, V, C)))
+    svc = GcnService(CFG, plans=(plan,), bn_stats=(bn,), capacity_tiers=(2,),
+                     retain_records=3)
+    clip = np.zeros((4, V, C), np.float32)
+    for _ in range(9):
+        h = svc.open_session()
+        svc.submit_clip(h, clip)
+        svc.run_until_idle()
+        assert svc.poll(h).state == "done"   # newest is always pollable
+    assert len(svc._records) <= 3
+    assert len(svc._sessions) <= 3
+    assert len(svc.sched.completed) <= 3
+    m = svc.metrics()
+    assert m["sessions"] == 9                # lifetime counter, not len()
+    assert len(m["records"]) <= 3
+    assert len(svc.metrics(keep_records=1)["records"]) == 1
+    with pytest.raises(ValueError):
+        GcnService(CFG, plans=(plan,), bn_stats=(bn,), retain_records=0)

@@ -518,3 +518,76 @@ def test_run_sessions_end_to_end():
         # K=9 / skip-2 / stride-2 pipeline, same hand-worked number as
         # test_streaming.test_flush_frames_formula)
         assert rec.finished - rec.admitted + 1 == rec.frames + 37
+
+
+# --------------------------------------------- long-lived-service bugfixes
+
+def test_peek_priority_empty_queue_returns_none():
+    """Regression: peeking an empty admission queue (the preempt policy
+    probes it every tick) returns None instead of raising IndexError."""
+    q = sess.AdmissionQueue()
+    assert q.peek_priority() is None
+    clip = np.zeros((1, V, C), np.float32)
+    q.push(sess.SessionRequest(sid=0, arrival=0, clip=clip, priority=3))
+    assert q.peek_priority() == 3
+    q.pop()
+    assert q.peek_priority() is None
+
+
+def test_sweep_expired_unit():
+    """Regression: sweep_expired drops expired queued sessions *before*
+    anyone reads queue depth — stale demand must not linger — is
+    idempotent, and is a no-op under non-deadline policies."""
+    sched = sess.SlabScheduler(1, V, C, flush_frames=lambda T: 1,
+                               first_logit_delay=1, policy="deadline")
+    clip = np.zeros((2, V, C), np.float32)
+    for sid in range(4):                    # all already expired at tick 5
+        sched.submit(sess.SessionRequest(sid=sid, arrival=0, clip=clip,
+                                         deadline=2))
+    sched.submit(sess.SessionRequest(sid=9, arrival=0, clip=clip,
+                                     deadline=50))
+    assert len(sched.queue) == 5
+    sched.sweep_expired(5)
+    assert len(sched.queue) == 1            # only the live one remains
+    assert sorted(r.sid for r in sched.missed) == [0, 1, 2, 3]
+    sched.sweep_expired(5)                  # idempotent
+    assert sched.n_missed == 4
+    fifo = sess.SlabScheduler(1, V, C, flush_frames=lambda T: 1,
+                              first_logit_delay=1)
+    fifo.submit(sess.SessionRequest(sid=0, arrival=0, clip=clip,
+                                    deadline=-1))
+    fifo.sweep_expired(10)                  # fifo never sheds by deadline
+    assert len(fifo.queue) == 1
+
+
+def test_scheduler_bounded_memory_10k_soak():
+    """The long-lived-service lock: 10k sessions (a deadline mix, so both
+    the completed and missed paths churn) through a retain=64 scheduler
+    leave every host-side record structure bounded by the retention knob,
+    while the lifetime aggregates still count all 10k."""
+    retain = 64
+    sched = sess.SlabScheduler(8, V, C, flush_frames=lambda T: 0,
+                               first_logit_delay=1, policy="deadline",
+                               retain=retain)
+    clip = np.zeros((1, V, C), np.float32)
+    logits = np.zeros((8, 4))
+    tick, submitted = 0, 0
+    while submitted < 10_000 or not sched.idle():
+        while submitted < 10_000 and len(sched.queue) < 16:
+            # even sids get a hopeless deadline -> the missed path
+            dl = tick - 1 if submitted % 2 == 0 else tick + 100
+            sched.submit(sess.SessionRequest(sid=submitted, arrival=tick,
+                                             clip=clip, deadline=dl))
+            submitted += 1
+        sched.tick_inputs(tick, 0.0)
+        sched.tick_outputs(tick, logits, 0.0)
+        tick += 1
+        assert tick < 50_000
+    assert sched.n_completed + sched.n_missed == 10_000
+    assert sched.n_completed >= 5_000       # the live half all complete
+    assert len(sched.completed) <= retain
+    assert len(sched.missed) <= retain
+    assert len(sched.missed_sids) <= retain
+    assert len(sched.occupancy_samples) <= retain
+    # lifetime aggregates survive the trim: occupancy over *all* ticks
+    assert 0 < sched.occ_sum / sched.occ_ticks <= 1

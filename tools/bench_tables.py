@@ -28,15 +28,24 @@ def render(path: pathlib.Path) -> str:
         if isinstance(r, dict) and "name" in r:
             us = r.get("us_per_call", 0.0)
             out.append(f"| `{r['name']}` | {us:,.0f} | {r.get('derived', '')} |")
-        else:  # sessions rows are flat metric dicts, one per
-               # (backend, slots, qos, capacity, load) — the merge key
+        else:  # sessions rows are flat metric dicts, one per (backend,
+               # slots, qos, capacity, load, mesh, replicas) — the merge key
             qos = r.get("qos", "fifo")
             label = f"sessions/{r['backend']}/{qos}"
             if r.get("capacity", "fixed") != "fixed":
                 label += f"/{r['capacity']}"
             if r.get("load", "poisson") != "poisson":
                 label += f"[{r['load']}]"
+            if r.get("mesh", 1) > 1:
+                label += f"/mesh{r['mesh']}"
+            if r.get("replicas", 1) > 1:
+                label += f"/x{r['replicas']}"
             extra = ""
+            if r.get("mesh", 1) > 1:
+                extra += (f", collective "
+                          f"{r.get('collective_ms_per_tick', 0):.1f}ms/tick")
+            if r.get("replicas", 1) > 1:
+                extra += f", {r.get('rebalances', 0)} rebalances"
             if r.get("preemptions"):
                 extra = (f", preempt/restore "
                          f"{r['preemptions']}/{r.get('restores', 0)}")
