@@ -188,6 +188,11 @@ def main():
         emit(f"throughput/measured/sessions/{backend}/shrink_8to4", t_shrink,
              f"rows=4 vs_fifo_tick={(t_shrink / t_fifo) * 100:.0f}% "
              f"(interpret CPU)")
+        # trace_replay axis: the checked-in smoke trace through the full
+        # GcnService under both capacity policies — the measured cost of
+        # the SLO control loop (latency window, admission gating, shed
+        # bookkeeping) against the demand controller on identical traffic
+        _trace_replay_axis(ep, backend, cfg, x)
         # tick_fused axis: the one-dispatch serving tick (hybrid: plain
         # async step on event-free ticks, donated engine.fused_tick on
         # event ticks) against the legacy multi-dispatch tick (per-event
@@ -233,6 +238,45 @@ def _paired(fa, fb, warmup: int = 1, iters: int = 5):
     finally:
         gc.enable()
     return min(ta) * 1e6, min(tb) * 1e6
+
+
+def _trace_replay_axis(ep, backend, cfg, x):
+    """Emit throughput/measured/trace_replay rows: the smoke trace
+    replayed through a (2, 4)-tier GcnService under policy=demand vs
+    policy=slo — identical traffic by construction, so the delta is the
+    controller itself."""
+    import pathlib
+
+    from benchmarks import common
+    from repro.core.agcn import engine
+    from repro.serving import SloConfig, Trace, replay
+
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "tests" / "data" / "traces" / "smoke.json")
+    trace = Trace.load(str(path))
+    if common.SMOKE:
+        # smoke tier: the first half of the burst exercises the whole
+        # path (admission gating, growth, shed) in a fraction of the wall
+        import dataclasses
+        trace = dataclasses.replace(trace, events=trace.events[:7],
+                                    name=trace.name + "-head7")
+    bn = engine.collect_bn_stats(ep, x)
+    scfg = SloConfig(target_p99_ticks=45, window=16, breach_patience=2,
+                     recover_patience=8, shed_mode="reject")
+    for policy in ("demand", "slo"):
+        out = replay(cfg, trace, backend=backend, qos="fifo", policy=policy,
+                     capacity_tiers=(2, 4),
+                     slo_config=scfg if policy == "slo" else None,
+                     plans=(ep,), bn_stats=(bn,))
+        per_tick = out["wall_s"] * 1e6 / max(out["ticks"], 1)
+        hp = out["latency_ms_by_priority"].get("1", {})
+        emit(f"throughput/measured/trace_replay/{backend}/{trace.name}"
+             f"/{policy}", per_tick,
+             f"ticks={out['ticks']} sessions={out['sessions']} "
+             f"rejected={out.get('sessions_rejected', 0)} "
+             f"hp_first_logit_p99_ticks="
+             f"{hp.get('first_logit_p99_ticks', -1.0):.1f} "
+             f"(interpret CPU)")
 
 
 def _tick_fused_axis(ep, backend, cfg, x):

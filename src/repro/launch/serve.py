@@ -181,7 +181,9 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                        backends=("reference", "pallas"), qos: str = "fifo",
                        preempt_ratio: float = 0.25, deadline_slack: int = 25,
                        capacity_tiers=None, load: str = "poisson",
-                       mesh: int = 0, replicas: int = 1):
+                       mesh: int = 0, replicas: int = 1,
+                       policy: str = "demand", slo_config=None,
+                       trace: str = ""):
     """Multi-session stream serving through :class:`repro.serving.GcnService`.
 
     One service per backend (two-stream ensemble) under the ``qos`` policy
@@ -196,13 +198,33 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
     gains ``mesh`` + ``collective_ms_per_tick``); ``replicas > 1`` also
     runs the load through a :class:`~repro.distributed.router.
     ReplicaRouter` and appends the merged routed row (``replicas`` +
-    ``rebalances`` axes).  Returns the metrics dicts from
-    :func:`repro.serving.run_sessions` (and the routed runs) and merges
-    them into ``BENCH_sessions.json``."""
-    from repro.serving import run_sessions, write_bench
+    ``rebalances`` axes).
+
+    ``trace`` replays a recorded :class:`~repro.serving.Trace` file
+    byte-identically instead of generating load (``--trace FILE``): the
+    arrivals, clip lengths, priorities and clip bytes are pinned by the
+    trace, so two invocations differing only in ``policy`` A/B the
+    controllers on identical traffic.  ``policy="slo"`` swaps the
+    demand-driven capacity manager for the :class:`~repro.serving.
+    SloController` (grow on measured p99 first-logit regression, shed via
+    admission control at the top tier).  Returns the metrics dicts from
+    :func:`repro.serving.run_sessions` / :func:`repro.serving.replay`
+    (and the routed runs) and merges them into ``BENCH_sessions.json``."""
+    from repro.serving import Trace, replay, run_sessions, write_bench
 
     cfg = get_config(arch, reduced=reduced)
     assert cfg.family == "gcn", f"{arch} is not a gcn-family arch"
+    if trace:
+        rec = Trace.load(trace)
+        results = [
+            replay(cfg, rec, backend=backend, qos=qos, policy=policy,
+                   capacity_tiers=tuple(capacity_tiers or (slots,)),
+                   slo_config=slo_config, deadline_slack=deadline_slack,
+                   seed=seed)
+            for backend in backends
+        ]
+        write_bench(results)
+        return results
     n = n_sessions or 3 * slots
     # default mean inter-arrival ~ clip_len / slots keeps the slab busy
     # without unbounded queueing (offered load ≈ capacity)
@@ -214,7 +236,7 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                          seed=seed, qos=qos, preempt_ratio=preempt_ratio,
                          deadline_slack=deadline_slack,
                          capacity_tiers=capacity_tiers, load=load,
-                         mesh=mesh)
+                         mesh=mesh, policy=policy, slo_config=slo_config)
         results.append(r)
         if replicas > 1:
             from repro.distributed.router import run_routed_sessions
@@ -313,7 +335,7 @@ def _add_common(ap: argparse.ArgumentParser) -> None:
 
 def build_parser() -> argparse.ArgumentParser:
     """The subcommand CLI: ``serve clip|stream|sessions|lm [flags]``."""
-    from repro.serving import QOS_POLICIES
+    from repro.serving import CONTROL_POLICIES, QOS_POLICIES, SHED_MODES
 
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -358,6 +380,28 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--load", default="poisson", choices=("poisson", "burst"),
                    help="arrival process: steady poisson or bursty "
                         "peaks-and-lulls (the elastic stress shape)")
+    p.add_argument("--trace", default="",
+                   help="replay a recorded Trace JSON file instead of "
+                        "generating load — arrivals, lengths, priorities "
+                        "and clip bytes are pinned by the trace, so runs "
+                        "differing only in --policy A/B the controllers "
+                        "on identical traffic")
+    p.add_argument("--policy", default="demand", choices=CONTROL_POLICIES,
+                   help="capacity control: demand (grow on raw "
+                        "busy+queued) or slo (grow on measured p99 "
+                        "first-logit regression, shed low-priority opens "
+                        "via admission control at the top tier)")
+    p.add_argument("--slo-target", type=int, default=0,
+                   help="SLO bound: p99 arrival→first-logit latency in "
+                        "scheduler ticks (0 -> SloConfig default; only "
+                        "with --policy slo)")
+    p.add_argument("--slo-window", type=int, default=0,
+                   help="sliding latency-sample window of the SLO "
+                        "controller (0 -> SloConfig default)")
+    p.add_argument("--slo-shed-mode", default="", choices=("", *SHED_MODES),
+                   help="what shedding does to low-priority opens: reject "
+                        "turns them away, degrade serves every stride-th "
+                        "frame (default: SloConfig default)")
     p.add_argument("--mesh", type=int, default=0,
                    help="shard the slab tick over an N-device 1-D batch "
                         "mesh (0/1 -> single device; on CPU the "
@@ -426,8 +470,11 @@ def _print_sessions(results) -> None:
                   f"{r['rebalances']} rebalance moves")
             continue
         mesh = f" mesh={r['mesh']}" if r.get("mesh", 1) > 1 else ""
-        print(f"backend={r['backend']} [sessions{mesh} qos={r['qos']}{cap} "
-              f"load={r['load']}]: "
+        pol = (f" policy=slo trace={r.get('trace', '')}"
+               if r.get("policy", "demand") != "demand"
+               else (f" trace={r['trace']}" if r.get("trace") else ""))
+        print(f"backend={r['backend']} [sessions{mesh}{pol} qos={r['qos']}"
+              f"{cap} load={r['load']}]: "
               f"{r['sessions']} sessions over {r['slots']} slots, "
               f"{r['frames_per_s']:.1f} frames/s aggregate, "
               f"occupancy {r['occupancy']*100:.0f}% time-weighted "
@@ -442,7 +489,15 @@ def _print_sessions(results) -> None:
             print(f"  priority {p}: n={pl['n']} "
                   f"p50={pl['p50_ms']:.0f}ms p99={pl['p99_ms']:.0f}ms "
                   f"(arrival→finish p50={pl['e2e_p50_ticks']:.0f} "
-                  f"p99={pl['e2e_p99_ticks']:.0f} ticks)")
+                  f"p99={pl['e2e_p99_ticks']:.0f} ticks, "
+                  f"first-logit p99={pl['first_logit_p99_ticks']:.0f} "
+                  f"ticks)")
+        if r.get("policy", "demand") == "slo":
+            print(f"  slo: target p99 {r['slo_target_p99_ticks']} ticks, "
+                  f"shed_mode={r['shed_mode']} "
+                  f"rejected={r['sessions_rejected']} "
+                  f"degraded={r['sessions_degraded']} "
+                  f"({r['shed_windows']} shed windows)")
         if r["qos"] == "preempt":
             print(f"  preemptions={r['preemptions']} "
                   f"restores={r['restores']}")
@@ -492,6 +547,17 @@ def main(argv=None):
     if args.mode == "sessions":
         assert cfg.family == "gcn", f"{args.arch} is not a gcn-family arch"
         _ensure_fake_devices(getattr(args, "mesh", 0))
+        slo_config = None
+        if getattr(args, "policy", "demand") == "slo":
+            from repro.serving import SloConfig
+            overrides = {}
+            if getattr(args, "slo_target", 0):
+                overrides["target_p99_ticks"] = args.slo_target
+            if getattr(args, "slo_window", 0):
+                overrides["window"] = args.slo_window
+            if getattr(args, "slo_shed_mode", ""):
+                overrides["shed_mode"] = args.slo_shed_mode
+            slo_config = SloConfig(**overrides)
         results = serve_gcn_sessions(
             args.arch, reduced=args.reduced, slots=args.slots,
             n_sessions=args.n_sessions, rate=args.rate, backends=backends,
@@ -499,7 +565,9 @@ def main(argv=None):
             deadline_slack=args.deadline_slack,
             capacity_tiers=_parse_tiers(args.capacity_tiers),
             load=args.load, mesh=getattr(args, "mesh", 0),
-            replicas=getattr(args, "replicas", 1))
+            replicas=getattr(args, "replicas", 1),
+            policy=getattr(args, "policy", "demand"), slo_config=slo_config,
+            trace=getattr(args, "trace", ""))
         _print_sessions(results)
         return
     if args.mode == "stream":

@@ -125,13 +125,17 @@ class SessionRequest:
     ``priority`` orders admission (larger = more urgent; ties are FIFO by
     arrival) and selects preemption victims under the ``preempt`` policy;
     ``deadline`` is the absolute tick by which the session must *complete*
-    under the ``deadline`` policy (None = no deadline)."""
+    under the ``deadline`` policy (None = no deadline).  ``degrade`` is the
+    frame-skip stride (1 = full fidelity): a degraded session is served on
+    every ``degrade``-th raw frame only — the SLO controller's shed-by-
+    fidelity mode — so it occupies its slot for ~1/stride the ticks."""
 
     sid: int
     arrival: int             # tick index at which the session arrives
     clip: Optional[np.ndarray] = None   # (T, V, C) raw frames (closed mode)
     priority: int = 0
     deadline: Optional[int] = None
+    degrade: int = 1         # frame-skip stride (1 = every frame)
 
     def __post_init__(self):
         self._buf: List[np.ndarray] = []
@@ -159,6 +163,12 @@ class SessionRequest:
         if self._released is not None:
             return self._released
         return len(self.clip) if self.clip is not None else len(self._buf)
+
+    def eff_frames(self) -> int:
+        """Frames the scheduler will actually feed: ``n_frames`` decimated
+        by the ``degrade`` stride (``ceil(n / degrade)`` — frame 0 is
+        always served, so a non-empty session always feeds at least 1)."""
+        return -(-self.n_frames() // max(1, int(self.degrade)))
 
     def frame(self, i: int) -> np.ndarray:
         """The i-th raw (V, C) frame."""
@@ -190,6 +200,8 @@ class SessionRecord:
     logits: np.ndarray       # (num_classes,) post-drain prediction
     priority: int = 0
     preemptions: int = 0     # times this session was snapshot-evicted
+    first_logit_tick: int = -1   # tick of the first valid logit (-1: never)
+    degrade: int = 1         # frame-skip stride the session was served at
 
 
 def _requests_from_arrivals(
@@ -234,12 +246,16 @@ def poisson_arrivals(
     clip_source: Optional[Callable[[int, int], np.ndarray]] = None,
     priorities: Optional[Sequence[int]] = None,
     high_priority_ratio: float = 0.0,
+    rng: Optional[np.random.Generator] = None,
 ) -> List[SessionRequest]:
     """Poisson-process session arrivals (exponential inter-arrival ticks).
 
     Clip/priority semantics per :func:`_requests_from_arrivals`.  Returns
-    requests sorted by arrival tick (the first arrival anchors tick 0)."""
-    rng = np.random.default_rng(seed)
+    requests sorted by arrival tick (the first arrival anchors tick 0).
+    All randomness comes from ``rng`` when given (``default_rng(seed)``
+    otherwise) — never from numpy's global state, so interleaved
+    generators and concurrent benchmark runs cannot cross-contaminate."""
+    rng = rng if rng is not None else np.random.default_rng(seed)
     gaps = rng.exponential(mean_interarrival, size=n_sessions)
     arrivals = np.floor(np.cumsum(gaps) - gaps[0]).astype(int)
     return _requests_from_arrivals(arrivals, lengths, joints, channels, rng,
@@ -260,6 +276,7 @@ def bursty_arrivals(
     clip_source: Optional[Callable[[int, int], np.ndarray]] = None,
     priorities: Optional[Sequence[int]] = None,
     high_priority_ratio: float = 0.0,
+    rng: Optional[np.random.Generator] = None,
 ) -> List[SessionRequest]:
     """Bursty Poisson arrivals: alternating traffic peaks and lulls.
 
@@ -268,8 +285,10 @@ def bursty_arrivals(
     between bursts — the elastic-capacity stress load (a fixed small slab
     queues the bursts, a fixed large slab idles through the lulls; the
     elastic tier manager should do neither).  Clip/priority semantics per
-    :func:`_requests_from_arrivals`."""
-    rng = np.random.default_rng(seed)
+    :func:`_requests_from_arrivals`; as with :func:`poisson_arrivals`, all
+    randomness comes from the explicit ``rng`` (or ``default_rng(seed)``),
+    never numpy's global state."""
+    rng = rng if rng is not None else np.random.default_rng(seed)
     gaps = []
     for i in range(n_sessions):
         if i == 0:
@@ -301,10 +320,11 @@ class _Slot:
 
     req: SessionRequest
     admitted: int            # first admission tick
-    rel: int                 # raw frames fed so far (clip + flush)
-    total: Optional[int]     # clip length + flush drain (None until closed)
+    rel: int                 # frames fed so far (decimated clip + flush)
+    total: Optional[int]     # eff. clip length + flush drain (None: open)
     wall_admitted: float
     wall_first_logit: float = -1.0
+    first_logit_tick: int = -1    # tick-denominated twin of the wall latch
     preemptions: int = 0
     held: bool = False
 
@@ -486,6 +506,10 @@ class SlabScheduler:
         # (after its frames are released) — the service uses it to bound
         # its own per-sid bookkeeping in lockstep
         self.on_miss: Optional[Callable[[SessionRequest], None]] = None
+        # optional callback fired the tick a session's first valid logit
+        # latches: (priority, arrival->latch ticks) — the measurement the
+        # SLO controller's control loop closes on
+        self.on_first_logit: Optional[Callable[[int, int], None]] = None
         self.valid_frames = 0        # real (clip) frames fed across all slots
         self.preemptions = 0         # snapshot-evictions performed
         self.restores = 0            # preempted sessions re-admitted
@@ -681,10 +705,17 @@ class SlabScheduler:
             slot.held = False
             req = slot.req
             if slot.total is None and req.is_closed():
-                n = req.n_frames()
+                # service-time budget in *effective* frames: a degraded
+                # session's clip is stride-decimated, so both the clip
+                # phase and the flush drain shrink by ~the stride
+                n = req.eff_frames()
                 slot.total = n + self.flush_frames(n)
-            if slot.rel < req.n_frames():
-                frames[s] = req.frame(slot.rel)
+            stride = max(1, int(req.degrade))
+            if slot.rel * stride < req.n_frames():
+                # feed effective frame ``rel`` = raw frame ``rel*stride``
+                # (stride 1 = every frame): the device sees a contiguous
+                # decimated stream — no engine change, no hold-mask cost
+                frames[s] = req.frame(slot.rel * stride)
                 valid[s] = True
                 self.valid_frames += 1
             elif slot.total is None:
@@ -783,6 +814,10 @@ class SlabScheduler:
             if (slot.wall_first_logit < 0
                     and slot.rel >= self.first_logit_delay - 1):
                 slot.wall_first_logit = now
+                slot.first_logit_tick = tick
+                if self.on_first_logit is not None:
+                    self.on_first_logit(slot.req.priority,
+                                        tick - slot.req.arrival)
             if slot.total is not None and slot.rel == slot.total - 1:
                 rec = SessionRecord(
                     sid=slot.req.sid, frames=slot.req.n_frames(),
@@ -792,7 +827,9 @@ class SlabScheduler:
                     wall_finished=now,
                     logits=np.asarray(logits[s]),
                     priority=slot.req.priority,
-                    preemptions=slot.preemptions)
+                    preemptions=slot.preemptions,
+                    first_logit_tick=slot.first_logit_tick,
+                    degrade=max(1, int(slot.req.degrade)))
                 done.append(rec)
                 self.completed.append(rec)   # bounded deque (maxlen=retain)
                 self.n_completed += 1
@@ -809,28 +846,36 @@ class SlabScheduler:
 
 def bench_key(row: Dict) -> Tuple:
     """Merge key of one ``BENCH_sessions.json`` row: ``(backend, slots,
-    qos, capacity, load, mesh, replicas)``.
+    qos, capacity, load, mesh, replicas, policy, trace)``.
 
     ``capacity`` distinguishes fixed-capacity runs (``"fixed"``, the
     default for rows written before the elastic axis existed) from elastic
     runs (``"elastic:2,4,8"`` — the tier tuple), and ``load`` the arrival
-    process (``"poisson"`` default vs ``"burst"``) — without them an
-    elastic run and its fixed baselines under the same (backend, slots,
-    qos) would collide and clobber each other.  ``mesh`` (device-mesh
-    size, default 1 = single device) and ``replicas`` (router replica
-    count, default 1 = one service) are the distributed axes: a sharded
-    or routed run must not clobber its single-device baseline."""
+    process (``"poisson"`` default vs ``"burst"`` vs ``"trace"`` for
+    trace replays) — without them an elastic run and its fixed baselines
+    under the same (backend, slots, qos) would collide and clobber each
+    other.  ``mesh`` (device-mesh size, default 1 = single device) and
+    ``replicas`` (router replica count, default 1 = one service) are the
+    distributed axes: a sharded or routed run must not clobber its
+    single-device baseline.  ``policy`` (capacity-control policy,
+    default ``"demand"`` for every pre-SLO row) and ``trace`` (the
+    replayed trace's name/digest, default ``""`` for generated loads)
+    are the A/B axes of the trace-replay harness: the same trace under
+    ``demand`` vs ``slo`` must land as two comparable rows, not one
+    clobbering the other."""
     return (row.get("backend"), row.get("slots"), row.get("qos", "fifo"),
             row.get("capacity", "fixed"), row.get("load", "poisson"),
-            row.get("mesh", 1), row.get("replicas", 1))
+            row.get("mesh", 1), row.get("replicas", 1),
+            row.get("policy", "demand"), row.get("trace", ""))
 
 
 def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
     """Merge the multi-session serving rows into ``BENCH_sessions.json``.
 
     Rows are keyed by :func:`bench_key` — ``(backend, slots, qos,
-    capacity, load)``, with legacy defaults ``qos="fifo"``,
-    ``capacity="fixed"``, ``load="poisson"`` for rows written before each
+    capacity, load, mesh, replicas, policy, trace)``, with legacy
+    defaults (``qos="fifo"``, ``capacity="fixed"``, ``load="poisson"``,
+    ``policy="demand"``, …) for rows written before each
     axis existed: an existing row with the same key is replaced in place,
     every other row survives, and new keys are appended — so
     ``serve sessions --backend pallas`` refreshes only the pallas rows
@@ -845,7 +890,8 @@ def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
                 existing = []
         except (json.JSONDecodeError, OSError):
             existing = []
-    fresh = {bench_key(r): {k: v for k, v in r.items() if k != "records"}
+    fresh = {bench_key(r): {k: v for k, v in r.items()
+                            if k not in ("records", "outcomes")}
              for r in results}
     rows = []
     for r in existing:

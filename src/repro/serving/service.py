@@ -42,12 +42,15 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.capacity import CapacityConfig, CapacityManager
-from repro.serving.scheduler import (QOS_POLICIES, SessionRecord,
-                                     SessionRequest, SlabScheduler,
-                                     bursty_arrivals, max_events_for,
-                                     pad_event_orders, poisson_arrivals)
+from repro.serving.scheduler import (QOS_POLICIES, AdmissionQueue,
+                                     SessionRecord, SessionRequest,
+                                     SlabScheduler, bursty_arrivals,
+                                     max_events_for, pad_event_orders,
+                                     poisson_arrivals)
+from repro.serving.slo import CONTROL_POLICIES, SloConfig, SloController
 
-SESSION_STATES = ("queued", "active", "draining", "done", "missed")
+SESSION_STATES = ("queued", "active", "draining", "done", "missed",
+                  "rejected")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,9 +68,12 @@ class SessionStatus:
     a preempted session awaiting re-admission), *active* (in a slot,
     consuming frames; a starved open session holds here), *draining*
     (stream closed, flush latency draining through the blocks), *done*
-    (final record available) or *missed* (dropped by the deadline
-    policy).  ``logits`` is the slot's running prediction while active/
-    draining, the final post-drain prediction when done, None otherwise."""
+    (final record available), *missed* (dropped by the deadline
+    policy) or *rejected* (turned away at open by the SLO controller's
+    admission shed — it never entered the scheduler; ``submit``/``close``
+    on it are no-ops).  ``logits`` is the slot's running prediction while
+    active/draining, the final post-drain prediction when done, None
+    otherwise."""
 
     sid: int
     state: str
@@ -98,6 +104,23 @@ class GcnService:
                          tier and the capacity manager hops the ladder).
       capacity_config  — hysteresis knobs (tiers taken from
                          ``capacity_tiers``).
+      policy           — capacity-control policy: ``"demand"`` (the
+                         :class:`CapacityManager` — grow on raw
+                         busy+queued demand) or ``"slo"`` (the
+                         :class:`~repro.serving.slo.SloController` — grow
+                         on measured p99 first-logit regression, shed via
+                         admission control when even the top tier can't
+                         hold the SLO).
+      slo_config       — :class:`~repro.serving.slo.SloConfig` knobs for
+                         ``policy="slo"`` (defaults when None; ignored
+                         under ``"demand"``).
+      record_outcomes  — keep a per-tick scheduler-outcome log under
+                         ``self.outcomes`` (admissions, restores,
+                         preemptions, finishes, misses, sheds, capacity)
+                         — the pure-host, float-free record the golden
+                         trace-replay tests lock.  Off by default: a
+                         long-lived service must not grow an unbounded
+                         log.
       quant            — Q8.8-quantize the plans (the paper's C5 target).
       seed             — parameter/init seed (ignored when ``plans`` is
                          given).
@@ -145,6 +168,9 @@ class GcnService:
     def __init__(self, cfg, *, backend: str = "reference", qos: str = "fifo",
                  capacity_tiers: Sequence[int] = (8,),
                  capacity_config: Optional[CapacityConfig] = None,
+                 policy: str = "demand",
+                 slo_config: Optional[SloConfig] = None,
+                 record_outcomes: bool = False,
                  quant: bool = True, seed: int = 0,
                  plans: Optional[Tuple] = None,
                  bn_stats: Optional[Any] = None,
@@ -162,6 +188,9 @@ class GcnService:
 
         if qos not in QOS_POLICIES:
             raise ValueError(f"unknown QoS policy {qos!r}")
+        if policy not in CONTROL_POLICIES:
+            raise ValueError(f"unknown capacity policy {policy!r} "
+                             f"(expected one of {CONTROL_POLICIES})")
         tiers = tuple(sorted(int(t) for t in capacity_tiers))
         if not tiers:
             raise ValueError("capacity_tiers must name at least one tier")
@@ -277,13 +306,30 @@ class GcnService:
         # deadline drops retire through the same bounded window as
         # completions, so service-side bookkeeping stays constant under a
         # miss-heavy load too
-        self.sched.on_miss = lambda req: self._retire(req.sid)
+        self.sched.on_miss = self._on_miss
+        self.policy = policy
         self.capman: Optional[CapacityManager] = None
-        if len(tiers) > 1:
+        self.slo: Optional[SloController] = None
+        if policy == "slo":
+            # the SLO controller replaces the demand manager outright —
+            # one `policy` knob swaps the whole control loop, and it is
+            # useful even at a single tier (pure admission control)
+            self.slo = SloController(
+                slo_config or SloConfig(), tiers=tiers, start_tier=tiers[0],
+                latency_floor=self.sched.first_logit_delay)
+            self.sched.on_first_logit = self.slo.record_first_logit
+        elif len(tiers) > 1:
             ccfg = capacity_config or CapacityConfig(tiers=tiers)
             if tuple(sorted(ccfg.tiers)) != tiers:
                 ccfg = dataclasses.replace(ccfg, tiers=tiers)
             self.capman = CapacityManager(ccfg, start_tier=tiers[0])
+        # per-tick scheduler-outcome log (golden-test shape; opt-in)
+        self.record_outcomes = bool(record_outcomes)
+        self.outcomes: List[Dict] = []
+        self._shed_tick: List[Dict] = []    # sheds since the last tick
+        self._missed_tick: List[int] = []   # misses within this tick
+        self._rejected: set = set()         # rejected sids (poll-side)
+        self.n_rejected = 0                 # lifetime rejected-open count
 
         # --- jitted device entry points ------------------------------------
         # under a mesh, every entry point pins its output shardings to the
@@ -377,8 +423,8 @@ class GcnService:
     def _retire(self, sid: int) -> None:
         """Enter ``sid`` into the bounded retirement window; the oldest
         retiree beyond ``retain_records`` loses its host-side bookkeeping
-        (request, record, legacy snapshot, missed-sid mirror) — its
-        outcome already lives in the lifetime aggregates."""
+        (request, record, legacy snapshot, missed/rejected-sid mirrors) —
+        its outcome already lives in the lifetime aggregates."""
         self._retired.append(sid)
         while len(self._retired) > self.retain_records:
             old = self._retired.popleft()
@@ -386,6 +432,14 @@ class GcnService:
             self._records.pop(old, None)
             self._snaps.pop(old, None)
             self.sched.missed_sids.discard(old)
+            self._rejected.discard(old)
+
+    def _on_miss(self, req: SessionRequest) -> None:
+        """Scheduler ``on_miss`` hook: retire the dropped session's
+        bookkeeping and note the miss in this tick's outcome log."""
+        self._retire(req.sid)
+        if self.record_outcomes:
+            self._missed_tick.append(req.sid)
 
     def _warm(self) -> None:
         """Compile the active tick path for every tier (plus the preempt
@@ -487,13 +541,37 @@ class GcnService:
         buffer is held in place, never zero-padded).  ``priority`` orders
         admission and selects preemption victims; ``deadline`` is the
         absolute completion-deadline tick under ``qos="deadline"``;
-        ``arrival`` backdates the queueing clock (defaults to now)."""
+        ``arrival`` backdates the queueing clock (defaults to now).
+
+        Under ``policy="slo"`` every open passes the controller's
+        admission gate first: while shedding, an unprotected open is
+        *rejected* (the handle polls as ``"rejected"``; it never enters
+        the scheduler and its frames are dropped) or *degraded* (served
+        at the configured frame-skip stride) per ``shed_mode``."""
         sid = self._next_sid
         self._next_sid += 1
         req = SessionRequest(
             sid=sid, arrival=self._tick if arrival is None else int(arrival),
             clip=None, priority=priority, deadline=deadline)
         self._sessions[sid] = req
+        if self.slo is not None:
+            verdict = self.slo.admit(priority)
+            if verdict == "reject":
+                # turned away at the door: the queue-forever alternative
+                # is exactly what the SLO policy exists to avoid
+                self._rejected.add(sid)
+                self.n_rejected += 1
+                if self.record_outcomes:
+                    self._shed_tick.append(
+                        {"sid": sid, "mode": "reject"})
+                self._retire(sid)
+                return SessionHandle(sid=sid)
+            if verdict == "degrade":
+                req.degrade = self.slo.config.degrade_stride
+                if self.record_outcomes:
+                    self._shed_tick.append(
+                        {"sid": sid, "mode": "degrade",
+                         "stride": req.degrade})
         self.sched.submit(req)
         return SessionHandle(sid=sid)
 
@@ -504,7 +582,11 @@ class GcnService:
             raise KeyError(f"unknown session handle {h!r}") from None
 
     def submit(self, h: SessionHandle, frame: np.ndarray) -> None:
-        """Append one raw (V, C) skeleton frame to the session's stream."""
+        """Append one raw (V, C) skeleton frame to the session's stream.
+        A no-op on a rejected session (the frames would never be served;
+        batch drivers need not special-case the shed path)."""
+        if h.sid in self._rejected:
+            return
         frame = np.asarray(frame, np.float32)
         if frame.shape != (self.cfg.gcn_joints, self.cfg.gcn_in_channels):
             raise ValueError(
@@ -514,14 +596,20 @@ class GcnService:
 
     def submit_clip(self, h: SessionHandle, clip: np.ndarray) -> None:
         """Submit a whole (T, V, C) clip and close the stream — the batch
-        convenience over per-frame :meth:`submit` + :meth:`close`."""
+        convenience over per-frame :meth:`submit` + :meth:`close` (and,
+        like them, a no-op on a rejected session)."""
+        if h.sid in self._rejected:
+            return
         for frame in np.asarray(clip, np.float32):
             self._req(h).push_frame(frame)
         self.close(h)
 
     def close(self, h: SessionHandle) -> None:
         """End the session's stream.  The scheduler drains the flush
-        latency and the final record becomes available via :meth:`poll`."""
+        latency and the final record becomes available via :meth:`poll`.
+        A no-op on a rejected session."""
+        if h.sid in self._rejected:
+            return
         self._req(h).close()
 
     def poll(self, h: SessionHandle, *, wait: bool = False) -> SessionStatus:
@@ -545,9 +633,18 @@ class GcnService:
             return SessionStatus(
                 sid=h.sid, state="missed", frames_submitted=req.n_frames(),
                 frames_consumed=0, priority=req.priority)
+        if h.sid in self._rejected:              # shed at open, never queued
+            return SessionStatus(
+                sid=h.sid, state="rejected",
+                frames_submitted=req.n_frames(),
+                frames_consumed=0, priority=req.priority)
         for s, slot in enumerate(self.sched.slots):
             if slot is not None and slot.req is req:
-                state = ("active" if slot.rel < req.n_frames()
+                # slot.rel counts *effective* (stride-decimated) frames;
+                # report consumption in raw frames so clients see clip
+                # progress regardless of the fidelity the SLO shed picked
+                stride = max(1, int(req.degrade))
+                state = ("active" if slot.rel < req.eff_frames()
                          or not req.is_closed() else "draining")
                 if wait:
                     self._force_logits()
@@ -556,7 +653,7 @@ class GcnService:
                           else None)
                 return SessionStatus(
                     sid=h.sid, state=state, frames_submitted=req.n_frames(),
-                    frames_consumed=min(slot.rel, req.n_frames()),
+                    frames_consumed=min(slot.rel * stride, req.n_frames()),
                     priority=req.priority, logits=logits)
         # queued — either never admitted, or a preempted slot awaiting
         # re-admission (which keeps its consumed-frame progress); O(1)
@@ -599,6 +696,23 @@ class GcnService:
                 budget -= 1
             if self.capman.capacity != start:
                 self._migrate(self.capman.capacity)
+        elif self.slo is not None and tick > self._tick:
+            sc = self.slo.config
+            # idle means every session drained: drop the stale latency
+            # window (it describes a regime that no longer exists and
+            # would pin the controller in breach forever), then feed
+            # enough empty observations to walk the ladder down
+            self.slo.idle_reset()
+            budget = len(self.tiers) * (sc.recover_patience + sc.cooldown + 1)
+            start = self.slo.capacity
+            t = self._tick
+            while (t < tick and budget > 0
+                   and self.slo.capacity > self.tiers[0]):
+                self.slo.observe(0, 0, t, queue_age=0)
+                t += 1
+                budget -= 1
+            if self.slo.capacity != start:
+                self._migrate(self.slo.capacity)
         self._tick = max(self._tick, tick)
 
     # -- the serving tick -----------------------------------------------------
@@ -635,16 +749,51 @@ class GcnService:
         jnp = self._jnp
         t0 = time.monotonic()
         dev0 = self.wall_device_s
-        if self.capman is not None:
-            # sweep deadline-expired sessions *before* the capacity
-            # manager looks: expired slots/queue entries are not demand,
+        if self.capman is not None or self.slo is not None:
+            # sweep deadline-expired sessions *before* the controller
+            # looks: expired slots/queue entries are not demand,
             # and counting them used to trigger spurious grows
             self.sched.sweep_expired(self._tick)
+        if self.slo is not None:
+            # the leading-edge breach signal: the oldest queued session's
+            # wait so far — a saturated queue never latches first logits,
+            # so the p99 window alone would look healthy while everyone
+            # starves
+            queue_age = max(
+                (self._tick - AdmissionQueue._req(it).arrival
+                 for it in self.sched.queue), default=0)
+            target = self.slo.observe(
+                self.sched.busy(), len(self.sched.queue), self._tick,
+                queue_age=queue_age)
+            if target is not None and target != self.capacity:
+                self._migrate(target)
+        elif self.capman is not None:
             target = self.capman.observe(
                 self.sched.busy(), len(self.sched.queue), self._tick)
             if target is not None:
                 self._migrate(target)
         tp = self.sched.tick_inputs(self._tick, t0)
+        outcome = None
+        if self.record_outcomes:
+            # pure host ints, no wall times / logits: the per-tick shape
+            # the golden replay tests lock byte-for-byte.  Captured right
+            # after tick_inputs (a tiny degraded session can finish on
+            # its own admission tick, freeing the slot before outputs).
+            outcome = {
+                "tick": self._tick,
+                "capacity": self.capacity,
+                "busy": self.sched.busy(),
+                "queued": len(self.sched.queue),
+                "admitted": sorted(
+                    self.sched.slots[s].req.sid
+                    for s in np.flatnonzero(tp.reset)
+                    if self.sched.slots[s] is not None),
+                "restored": sorted(sid for _, sid in tp.restore),
+                "preempted": sorted(sid for _, sid in tp.snapshot),
+                "held": int(tp.hold.sum()),
+                "shed": self._shed_tick,
+            }
+            self._shed_tick = []
         if self.fused:
             if tp.snapshot or tp.restore:
                 # event tick — one donated dispatch: snapshot gathers ->
@@ -704,6 +853,11 @@ class GcnService:
             self._retire(rec.sid)
         # (deadline misses release + retire through the scheduler's
         # on_miss hook the moment they are swept)
+        if outcome is not None:
+            outcome["finished"] = sorted(r.sid for r in done)
+            outcome["missed"] = sorted(self._missed_tick)
+            self._missed_tick = []
+            self.outcomes.append(outcome)
         self.tier_ticks[self.capacity] += 1
         self._tick += 1
         self.wall_host_s += ((time.monotonic() - t0)
@@ -755,8 +909,9 @@ class GcnService:
         # _last_logits is NOT remapped: _migrate only runs inside tick(),
         # which overwrites it with the step's fresh logits before any
         # poll() can observe the stale rows
-        if self.capman is not None and self.capman.events:
-            self.capman.events[-1].wall_ms = (time.monotonic() - t0) * 1e3
+        ctrl = self.capman if self.capman is not None else self.slo
+        if ctrl is not None and ctrl.events:
+            ctrl.events[-1].wall_ms = (time.monotonic() - t0) * 1e3
 
     # -- cross-replica migration ----------------------------------------------
 
@@ -886,12 +1041,25 @@ class GcnService:
                              for r in recs if r.priority == p])
             pt = np.asarray([r.finished - r.arrival
                              for r in recs if r.priority == p], np.float64)
+            # first-logit latency in scheduler ticks (arrival -> latch):
+            # the SLO's own denomination, per class — the number the
+            # controller is judged on
+            ft = np.asarray([r.first_logit_tick - r.arrival
+                             for r in recs
+                             if r.priority == p and r.first_logit_tick >= 0],
+                            np.float64)
             by_prio[str(p)] = {
                 "n": int(len(pl)),
                 "p50_ms": float(np.percentile(pl, 50) * 1e3),
                 "p99_ms": float(np.percentile(pl, 99) * 1e3),
                 "e2e_p50_ticks": float(np.percentile(pt, 50)),
                 "e2e_p99_ticks": float(np.percentile(pt, 99)),
+                "first_logit_p50_ticks": (float(np.percentile(ft, 50))
+                                          if len(ft) else -1.0),
+                "first_logit_p99_ticks": (float(np.percentile(ft, 99))
+                                          if len(ft) else -1.0),
+                "degraded": int(sum(r.degrade > 1 for r in recs
+                                    if r.priority == p)),
             }
         n_missed = sched.n_missed
         ticks = self._tick
@@ -901,12 +1069,14 @@ class GcnService:
         # included)
         occ_busy = float(sched.occ_sum / max(sched.occ_ticks, 1))
         occ_time = float(sched.occ_sum / max(ticks, 1))
-        events = self.capman.events if self.capman is not None else []
+        ctrl = self.capman if self.capman is not None else self.slo
+        events = ctrl.events if ctrl is not None else []
         out = {
             "backend": self.backend,
             "slots": self.tiers[0],
             "mesh": self.mesh.size if self.mesh is not None else 1,
             "qos": self.qos,
+            "policy": self.policy,
             "capacity": ("fixed" if len(self.tiers) == 1 else
                          "elastic:" + ",".join(str(t) for t in self.tiers)),
             "sessions": sched.n_completed,
@@ -943,10 +1113,22 @@ class GcnService:
             "migrations_shrink": sum(e.new < e.old for e in events),
             "migration_ms_mean": (float(np.mean([e.wall_ms for e in events]))
                                   if events else 0.0),
+            # the tier walk itself (tick-denominated, wall-free) — what
+            # the golden trace tests lock alongside the outcome log
+            "resize_events": [[e.tick, e.old, e.new] for e in events],
             "tier_ticks": {str(S): n for S, n in self.tier_ticks.items()},
             "records": (recs if keep_records is None
                         else recs[len(recs) - min(keep_records, len(recs)):]),
         }
+        if self.slo is not None:
+            out["slo_target_p99_ticks"] = self.slo.config.target_p99_ticks
+            out["shed_mode"] = self.slo.config.shed_mode
+            out["shed_rejected"] = self.slo.shed_rejected
+            out["shed_degraded"] = self.slo.shed_degraded
+            out["shed_windows"] = self.slo.shed_windows
+            out["sessions_rejected"] = self.n_rejected
+            out["sessions_degraded"] = int(
+                sum(r.degrade > 1 for r in recs))
         return out
 
 
@@ -973,6 +1155,9 @@ def run_sessions(
     load: str = "poisson",
     fused: bool = True,
     mesh: int = 0,
+    policy: str = "demand",
+    slo_config: Optional[SloConfig] = None,
+    rng: Optional[np.random.Generator] = None,
 ) -> Dict:
     """Serve ``n_sessions`` generated skeleton sessions through a
     :class:`GcnService` with the two-stream (joint + bone) ensemble.
@@ -990,8 +1175,12 @@ def run_sessions(
     deadline is its minimal service time (clip + flush) plus
     ``deadline_slack`` ticks past arrival.  ``mesh`` > 1 runs the slab
     sharded across that many devices (a 1-D batch mesh; the row gains a
-    ``collective_ms_per_tick`` estimate).  Returns the
-    :meth:`GcnService.metrics` dict (also the row merged into
+    ``collective_ms_per_tick`` estimate).  ``policy`` selects the
+    capacity controller (``"demand"`` | ``"slo"``, knobs via
+    ``slo_config``); ``rng`` threads an explicit generator into the load
+    generators (``default_rng(seed)`` otherwise — numpy's global state is
+    never touched, so concurrent runs can't cross-contaminate).  Returns
+    the :meth:`GcnService.metrics` dict (also the row merged into
     ``BENCH_sessions.json`` by ``serve sessions``)."""
     from repro.data.pipeline import DataConfig, skeleton_batches
 
@@ -1001,6 +1190,7 @@ def run_sessions(
         mesh_obj = make_batch_mesh(mesh)
     tiers = tuple(capacity_tiers) if capacity_tiers else (slots,)
     svc = GcnService(cfg, backend=backend, qos=qos, capacity_tiers=tiers,
+                     policy=policy, slo_config=slo_config,
                      quant=quant, seed=seed, fused=fused, mesh=mesh_obj)
 
     if lengths is None:
@@ -1021,13 +1211,13 @@ def run_sessions(
             burst_gap=max(1.0, mean_interarrival / 8.0),
             lull_gap=mean_interarrival * 8.0,
             seed=seed, clip_source=clip_source, priorities=priorities,
-            high_priority_ratio=preempt_ratio)
+            high_priority_ratio=preempt_ratio, rng=rng)
     elif load == "poisson":
         reqs = poisson_arrivals(
             n_sessions, mean_interarrival, lengths,
             cfg.gcn_joints, cfg.gcn_in_channels, seed=seed,
             clip_source=clip_source, priorities=priorities,
-            high_priority_ratio=preempt_ratio)
+            high_priority_ratio=preempt_ratio, rng=rng)
     else:
         raise ValueError(f"unknown load {load!r} (poisson | burst)")
     if qos == "deadline":

@@ -20,6 +20,12 @@
 #                       (mesh-sharded slab parity, cross-replica migration
 #                       parity, router pinning/rebalance units); the full
 #                       tier runs it too
+#   ./test.sh --traces  traffic/trace tier — tests/test_traffic.py (traffic
+#                       model properties, trace serialization, SLO
+#                       controller units; Monte-Carlo cells are @slow) +
+#                       tests/test_traces_golden.py (golden trace replay
+#                       locks + the demand-vs-slo acceptance A/B); the
+#                       full tier runs both via normal collection
 # Extra args pass through to pytest (e.g. ./test.sh --fast -k streaming).
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -30,12 +36,14 @@ export JAX_PLATFORMS=cpu
 FAST=0
 DOCS=0
 DIST=0
+TRACES=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --fast) FAST=1 ;;
     --docs) DOCS=1 ;;
     --dist) DIST=1 ;;
+    --traces) TRACES=1 ;;
     *) ARGS+=("$a") ;;
   esac
 done
@@ -49,6 +57,9 @@ run_dist() {
 
 if [ "$DIST" = 1 ]; then
   run_dist
+elif [ "$TRACES" = 1 ]; then
+  python -m pytest -x -q tests/test_traffic.py tests/test_traces_golden.py \
+    ${ARGS[@]+"${ARGS[@]}"}
 elif [ "$DOCS" = 1 ]; then
   python tools/check_docs.py
   python tools/check_api.py

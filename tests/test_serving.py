@@ -397,7 +397,7 @@ def test_write_bench_elastic_rows_do_not_collide(tmp_path):
     assert rows[1]["capacity"] == "elastic:2,4,8"
     assert "records" not in rows[1]
     assert bench_key(legacy) == ("reference", 2, "fifo", "fixed", "poisson",
-                                 1, 1)
+                                 1, 1, "demand", "")
     assert bench_key(elastic) != bench_key(fixed_burst) != bench_key(legacy)
     # replace just the elastic row
     write_bench([{**elastic, "frames_per_s": 311.0}], path)
@@ -552,3 +552,72 @@ def test_service_bookkeeping_bounded_and_keep_records(params):
     assert len(svc.metrics(keep_records=1)["records"]) == 1
     with pytest.raises(ValueError):
         GcnService(CFG, plans=(plan,), bn_stats=(bn,), retain_records=0)
+
+
+# --------------------------------------------- SLO overload coverage gap
+
+def test_overload_demand_queues_slo_sheds(params, prune_plan):
+    """Sustained overload at a saturated top tier — the cell the demand
+    policy has no answer for.  A drip of low-priority sessions keeps both
+    slots of the (only) tier busy end-to-end; a high-priority session
+    arrives mid-overload.  Under ``policy="demand"`` there is no higher
+    tier to grow into and no admission control, so the high-priority
+    session waits out a full slot turnover behind *active* low-priority
+    work and breaches the 50-tick first-logit bound.  Under
+    ``policy="slo"`` the controller sheds the late low-priority opens at
+    the top tier, a slot is free when the high-priority session arrives,
+    and its first-logit latency holds the bound — on the identical
+    arrival sequence."""
+    plan, bn = _plan_and_bn(params, prune_plan, "reference")
+    rng = np.random.default_rng(6)
+    T = 12
+    target = 50
+    # lows at 0, 2, then every 12 ticks; one high mid-overload at 70
+    lows = [0, 2] + list(range(12, 97, 12))
+    arrivals = [(t, 0) for t in lows] + [(70, 1)]
+
+    def run(policy):
+        svc = GcnService(
+            CFG, plans=(plan,), bn_stats=(bn,), capacity_tiers=(2,),
+            policy=policy,
+            slo_config=(serving.SloConfig(
+                target_p99_ticks=target, window=16, breach_patience=2,
+                recover_patience=16, shed_mode="reject")
+                if policy == "slo" else None))
+        pending = sorted(arrivals)
+        handles, i = [], 0
+        while svc.now < 400:
+            while i < len(pending) and pending[i][0] <= svc.now:
+                at, prio = pending[i]
+                h = svc.open_session(priority=prio, arrival=at)
+                if svc.poll(h).state != "rejected":
+                    svc.submit_clip(
+                        h, rng.standard_normal((T, V, C)).astype(np.float32))
+                handles.append((h, prio))
+                i += 1
+            if svc.idle():
+                if i == len(pending):
+                    break
+                svc.advance_clock(pending[i][0])
+                continue
+            svc.tick()
+        assert svc.idle()
+        return svc, handles
+
+    svc_d, hd = run("demand")
+    svc_s, hs = run("slo")
+    md, ms = svc_d.metrics(), svc_s.metrics()
+    hp_d = md["latency_ms_by_priority"]["1"]["first_logit_p99_ticks"]
+    hp_s = ms["latency_ms_by_priority"]["1"]["first_logit_p99_ticks"]
+    # demand admits everything and the high-priority session eats the
+    # turnover wait; slo sheds lows so it latches within the bound
+    assert hp_d > target
+    assert hp_s <= target
+    assert ms["sessions_rejected"] > 0
+    assert md.get("sessions_rejected", 0) == 0
+    # every high-priority session completes under both policies, and the
+    # rejected lows really are the shed ones (poll says so)
+    assert all(svc_s.poll(h).state == "done" for h, p in hs if p == 1)
+    assert sum(svc_s.poll(h).state == "rejected"
+               for h, p in hs) == ms["sessions_rejected"]
+    assert all(svc_d.poll(h).state == "done" for h, _ in hd)

@@ -1,0 +1,171 @@
+"""Golden-trace regression locks — the deterministic replay contract.
+
+Replaying a checked-in trace through a ``GcnService`` must reproduce the
+*scheduler-tick-level* outcome sequence exactly: which sessions were
+admitted, preempted, held, shed and finished on every tick, the tier
+walk, and the per-class first-logit percentiles in ticks.  The locks in
+``tests/data/traces/golden_smoke.json`` (regenerate with
+``tools/gen_golden_outcomes.py`` after *intentional* scheduler-semantic
+changes) cover the full (qos × policy) matrix on the reference backend.
+
+The acceptance A/B rides here too: on the checked-in bursty+diurnal
+trace, the demand policy breaches the high-priority p99 first-logit
+bound that the SLO policy holds by shedding — on identical traffic.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.agcn import engine
+from repro.core.agcn import model as M
+from repro.core.pruning.plan import build_prune_plan
+from repro.serving import (SloConfig, Trace, outcome_digest, replay,
+                           write_bench)
+
+CFG = get_config("agcn-2s", reduced=True)
+DATA = pathlib.Path(__file__).resolve().parent / "data" / "traces"
+
+GOLDEN = json.loads((DATA / "golden_smoke.json").read_text())
+SMOKE = Trace.load(str(DATA / "smoke.json"))
+TIERS = tuple(GOLDEN["tiers"])
+
+
+def _slo_config(shed_mode):
+    return SloConfig(**{**GOLDEN["slo"], "shed_mode": shed_mode})
+
+
+@pytest.fixture(scope="module")
+def plans_bn():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    pp = build_prune_plan(sw, CFG.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                         "cav-70-1", input_skip=2)
+    plan = engine.build_execution_plan(params, CFG, pp, quant=True,
+                                       backend="reference")
+    bn = engine.collect_bn_stats(plan, jax.random.normal(
+        jax.random.PRNGKey(1),
+        (2, CFG.gcn_frames, CFG.gcn_joints, CFG.gcn_in_channels)))
+    return (plan,), (bn,)
+
+
+def _replay_cell(plans_bn, qos, policy, trace=SMOKE, record=True):
+    plans, bn = plans_bn
+    shed_mode = "degrade" if policy == "slo-degrade" else "reject"
+    pol = "slo" if policy.startswith("slo") else "demand"
+    return replay(CFG, trace, backend="reference", qos=qos, policy=pol,
+                  capacity_tiers=TIERS,
+                  slo_config=_slo_config(shed_mode) if pol == "slo" else None,
+                  plans=plans, bn_stats=bn, record_outcomes=record)
+
+
+def test_trace_files_are_pinned():
+    """The checked-in traces are the locks' inputs — their digests are
+    part of the golden contract (regenerating with a drifted generator
+    must fail here, not silently rebase the outcomes)."""
+    assert SMOKE.digest() == GOLDEN["trace_digest"]
+    assert SMOKE.name == GOLDEN["trace"] == "smoke-v1"
+    big = Trace.load(str(DATA / "bursty_diurnal.json"))
+    assert big.name == "bursty-diurnal-v1"
+    assert big.digest() == "bed3d1610297"
+    assert len(big.events) == 64
+
+
+@pytest.mark.parametrize("qos,policy", [
+    ("fifo", "demand"),
+    ("fifo", "slo"),
+    ("fifo", "slo-degrade"),
+    pytest.param("preempt", "demand", marks=pytest.mark.slow),
+    pytest.param("preempt", "slo", marks=pytest.mark.slow),
+    pytest.param("deadline", "demand", marks=pytest.mark.slow),
+    pytest.param("deadline", "slo", marks=pytest.mark.slow),
+])
+def test_golden_outcomes(plans_bn, qos, policy):
+    """Tick-level outcome lock per (qos, policy) cell: the per-tick
+    admission/preemption/shed/finish log hashes to the golden digest and
+    the summary counters + tier walk + per-class first-logit percentiles
+    match exactly."""
+    want = GOLDEN["cells"][f"{qos}/{policy}"]
+    out = _replay_cell(plans_bn, qos, policy)
+    assert outcome_digest(out["outcomes"]) == want["outcome_digest"]
+    assert out["ticks"] == want["ticks"]
+    assert out["sessions"] == want["sessions"]
+    assert out["preemptions"] == want["preemptions"]
+    assert out["restores"] == want["restores"]
+    assert out["deadline_missed"] == want["deadline_missed"]
+    assert out["resize_events"] == want["migrations"]
+    assert out["capacity_final"] == want["capacity_final"]
+    for p, d in want["per_priority"].items():
+        got = out["latency_ms_by_priority"][p]
+        assert got["n"] == d["n"]
+        assert got["first_logit_p50_ticks"] == d["first_logit_p50_ticks"]
+        assert got["first_logit_p99_ticks"] == d["first_logit_p99_ticks"]
+        assert got["e2e_p99_ticks"] == d["e2e_p99_ticks"]
+    if policy.startswith("slo"):
+        assert out["sessions_rejected"] == want["sessions_rejected"]
+        assert out["sessions_degraded"] == want["sessions_degraded"]
+        assert out["shed_windows"] == want["shed_windows"]
+        # the golden slo cells must actually exercise shedding
+        assert want["shed_windows"] > 0
+        assert (want["sessions_rejected"] + want["sessions_degraded"]) > 0
+
+
+def test_replay_twice_is_identical(plans_bn):
+    """Replaying the same trace twice yields identical scheduler-tick
+    outcomes — the determinism half of the acceptance criterion."""
+    a = _replay_cell(plans_bn, "fifo", "slo")
+    b = _replay_cell(plans_bn, "fifo", "slo")
+    assert a["outcomes"] == b["outcomes"]
+    assert outcome_digest(a["outcomes"]) == outcome_digest(b["outcomes"])
+
+
+def test_trace_row_carries_merge_axes(plans_bn):
+    """Replay rows merge into BENCH_sessions.json keyed on policy+trace
+    (the A/B axes) and never leak the bulky outcome log."""
+    out = _replay_cell(plans_bn, "fifo", "demand")
+    assert out["policy"] == "demand"
+    assert out["load"] == "trace"
+    assert out["trace"] == "smoke-v1"
+    from repro.serving import bench_key
+    k1 = bench_key(out)
+    k2 = bench_key(_replay_cell(plans_bn, "fifo", "slo"))
+    assert k1 != k2 and k1[-2:] == ("demand", "smoke-v1")
+
+
+@pytest.mark.slow
+def test_acceptance_slo_holds_where_demand_breaches(plans_bn, tmp_path):
+    """THE acceptance criterion: on the checked-in bursty+diurnal trace,
+    replayed under both policies on identical events, the demand
+    controller breaches the high-priority p99 first-logit bound and the
+    SLO controller holds it (by shedding low-priority opens at the top
+    tier) — and the comparison rows land in a BENCH file with the
+    ``policy`` key."""
+    big = Trace.load(str(DATA / "bursty_diurnal.json"))
+    target = 90
+    scfg = SloConfig(target_p99_ticks=target, window=24, breach_patience=2,
+                     recover_patience=12, shed_mode="reject")
+    plans, bn = plans_bn
+    rows = []
+    for policy in ("demand", "slo"):
+        rows.append(replay(
+            CFG, big, backend="reference", qos="fifo", policy=policy,
+            capacity_tiers=(2, 4),
+            slo_config=scfg if policy == "slo" else None,
+            plans=plans, bn_stats=bn))
+    demand, slo = rows
+    hp_demand = demand["latency_ms_by_priority"]["1"]
+    hp_slo = slo["latency_ms_by_priority"]["1"]
+    assert hp_demand["first_logit_p99_ticks"] > target, \
+        "demand was expected to breach on this trace"
+    assert hp_slo["first_logit_p99_ticks"] <= target, \
+        "slo must hold the high-priority bound"
+    assert slo["sessions_rejected"] > 0          # held it BY shedding
+    assert demand.get("sessions_rejected", 0) == 0
+    bench = tmp_path / "BENCH_sessions.json"
+    write_bench(rows, path=str(bench))
+    saved = json.loads(bench.read_text())
+    assert {r["policy"] for r in saved} == {"demand", "slo"}
+    assert all(r["trace"] == "bursty-diurnal-v1" for r in saved)

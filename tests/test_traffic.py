@@ -1,0 +1,440 @@
+"""The traffic model, trace format and SLO controller — host-side units.
+
+Everything here is jax-free (the scheduler/controller/traffic layers are
+pure host logic), so the module runs in seconds.  The tentpole locks:
+
+* **Exact serialization** — ``Trace.from_json(trace.to_json())`` is
+  event-for-event identical, clip bytes included (each event's clip
+  derives from its own ``clip_seed``, never from generator state), and
+  unknown schema versions are rejected loudly.
+* **Determinism across processes** — the same ``TrafficConfig`` yields
+  the same digest in a fresh interpreter (the golden traces are
+  regenerable), and two *interleaved* ``TraceGenerator``\\ s reproduce
+  their solo sequences exactly (no global RNG state anywhere).
+* **The model's statistics** — the diurnal non-homogeneous Poisson
+  integrates to the requested mean rate, heavy-tailed length draws match
+  their tail index (Hill estimator, Monte-Carlo bounds), flash crowds
+  cluster within their span.
+* **SloController state walk** — grow on breach, shed at the top tier,
+  two-step recovery (un-shed before SLO-safe shrink), cooldown
+  hysteresis, and the admission verdicts (protected class never shed).
+"""
+import dataclasses
+import json
+import math
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.serving.capacity import CapacityConfig, CapacityManager
+from repro.serving.scheduler import bursty_arrivals, poisson_arrivals
+from repro.serving.slo import (CONTROL_POLICIES, SHED_MODES, SloConfig,
+                               SloController)
+from repro.serving.traffic import (LENGTH_DISTS, TRACE_SCHEMA_VERSION, Trace,
+                                   TraceEvent, TraceGenerator, TrafficConfig,
+                                   event_clip, generate_trace)
+
+V, C = 25, 3
+
+
+# ---------------------------------------------------------------------------
+# trace format: exact round-trip + schema versioning
+# ---------------------------------------------------------------------------
+
+def _sample_config(**kw):
+    base = dict(n_sessions=40, mean_interarrival=6.0, diurnal_amplitude=0.7,
+                diurnal_period=120.0, flash_crowd_prob=0.3,
+                flash_crowd_size=3.0, flash_crowd_span=4.0,
+                length_dist="lognormal", mean_frames=12.0, length_sigma=0.5,
+                min_frames=3, max_frames=40, high_priority_ratio=0.25,
+                seed=9)
+    base.update(kw)
+    return TrafficConfig(**base)
+
+
+def test_trace_roundtrip_exact():
+    trace = generate_trace(_sample_config(), name="rt")
+    back = Trace.from_json(trace.to_json())
+    assert back == trace                      # frozen dataclass equality
+    assert back.digest() == trace.digest()
+    # and the round-trip is idempotent at the byte level
+    assert back.to_json() == trace.to_json()
+
+
+def test_trace_events_sorted_and_ids_unique():
+    trace = generate_trace(_sample_config())
+    arr = [e.arrival for e in trace.events]
+    assert arr == sorted(arr)
+    assert len({e.sid for e in trace.events}) == len(trace.events)
+
+
+def test_trace_rejects_unknown_schema_version():
+    trace = generate_trace(_sample_config(n_sessions=3))
+    doc = json.loads(trace.to_json())
+    doc["version"] = TRACE_SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema version"):
+        Trace.from_json(json.dumps(doc))
+
+
+def test_trace_save_load(tmp_path):
+    trace = generate_trace(_sample_config(), name="disk")
+    p = tmp_path / "t.json"
+    trace.save(str(p))
+    assert Trace.load(str(p)) == trace
+
+
+def test_event_clip_is_byte_deterministic():
+    e = TraceEvent(sid=0, arrival=0, frames=7, clip_seed=12345)
+    a, b = event_clip(e, V, C), event_clip(e, V, C)
+    assert a.dtype == np.float32 and a.shape == (7, V, C)
+    np.testing.assert_array_equal(a, b)
+    # a different seed means different bytes — clips are per-event, not
+    # positional
+    e2 = dataclasses.replace(e, clip_seed=54321)
+    assert not np.array_equal(a, event_clip(e2, V, C))
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seed, fresh process, interleaved generators
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_trace():
+    cfg = _sample_config()
+    assert generate_trace(cfg) == generate_trace(cfg)
+
+
+def test_cross_process_determinism():
+    """The checked-in traces are regenerable: a fresh interpreter draws
+    the identical event sequence from the same TrafficConfig."""
+    cfg = _sample_config(n_sessions=24)
+    here = generate_trace(cfg).digest()
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from repro.serving.traffic import TrafficConfig, generate_trace\n"
+        f"cfg = TrafficConfig(**{dataclasses.asdict(cfg)!r})\n"
+        "print(generate_trace(cfg).digest())\n")
+    out = subprocess.run([sys.executable, "-c", code], cwd=".",
+                         capture_output=True, text=True, check=True)
+    assert out.stdout.strip() == here
+
+
+def test_interleaved_generators_reproduce_solo():
+    """Two generators advanced in lockstep draw exactly what each draws
+    alone — the no-global-RNG contract."""
+    ca, cb = _sample_config(seed=1), _sample_config(seed=2, mean_frames=20.0)
+    solo_a = list(TraceGenerator(ca))
+    solo_b = list(TraceGenerator(cb))
+    ga, gb = TraceGenerator(ca), TraceGenerator(cb)
+    inter_a, inter_b = [], []
+    for _ in range(ca.n_sessions):
+        inter_a.append(next(ga))
+        inter_b.append(next(gb))
+    assert inter_a == solo_a
+    assert inter_b == solo_b
+
+
+def test_poisson_bursty_rng_threading():
+    """The legacy load generators take an explicit Generator and never
+    touch global numpy state: interleaving two of them reproduces each
+    solo sequence, and the seed fallback is unchanged."""
+    lengths = [8] * 12
+    def arr(reqs):
+        return [(r.arrival, len(r.clip), r.priority) for r in reqs]
+
+    solo_p = arr(poisson_arrivals(12, 4.0, lengths, V, C,
+                                  rng=np.random.default_rng(3),
+                                  high_priority_ratio=0.5))
+    solo_b = arr(bursty_arrivals(12, lengths, V, C,
+                                 rng=np.random.default_rng(4),
+                                 high_priority_ratio=0.5))
+    # interleave: the *other* generator's draws must not perturb ours
+    ra, rb = np.random.default_rng(3), np.random.default_rng(4)
+    np.random.seed(0)                      # pollute global state on purpose
+    inter_p = arr(poisson_arrivals(12, 4.0, lengths, V, C, rng=ra,
+                                   high_priority_ratio=0.5))
+    np.random.seed(1234)
+    inter_b = arr(bursty_arrivals(12, lengths, V, C, rng=rb,
+                                  high_priority_ratio=0.5))
+    assert inter_p == solo_p
+    assert inter_b == solo_b
+    # seed fallback still deterministic
+    assert arr(poisson_arrivals(12, 4.0, lengths, V, C, seed=7)) == \
+        arr(poisson_arrivals(12, 4.0, lengths, V, C, seed=7))
+
+
+# ---------------------------------------------------------------------------
+# the model's statistics (deterministic grid; Monte-Carlo cells are slow)
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        TrafficConfig(mean_interarrival=0.0)
+    with pytest.raises(ValueError):
+        TrafficConfig(diurnal_amplitude=1.0)      # rate must stay positive
+    with pytest.raises(ValueError):
+        TrafficConfig(length_dist="weibull")
+    with pytest.raises(ValueError):
+        TrafficConfig(length_dist="pareto", pareto_alpha=1.0)
+    with pytest.raises(ValueError):
+        TrafficConfig(min_frames=5, max_frames=4)
+    assert "lognormal" in LENGTH_DISTS and "pareto" in LENGTH_DISTS
+
+
+def test_rate_is_diurnal():
+    cfg = _sample_config(diurnal_amplitude=0.5, diurnal_period=100.0,
+                         mean_interarrival=10.0)
+    assert cfg.rate(25.0) == pytest.approx(0.15)     # peak: (1+A)/mean
+    assert cfg.rate(75.0) == pytest.approx(0.05)     # trough: (1-A)/mean
+    # integrates to the base rate over a whole period
+    ts = np.linspace(0.0, 100.0, 10_001)
+    mean_rate = np.trapezoid([cfg.rate(t) for t in ts], ts) / 100.0
+    assert mean_rate == pytest.approx(0.1, rel=1e-3)
+
+
+def test_diurnal_empirical_mean_matches_requested():
+    """The thinned non-homogeneous process integrates to the requested
+    mean inter-arrival (flash crowds off — they add arrivals on top)."""
+    cfg = TrafficConfig(n_sessions=4000, mean_interarrival=5.0,
+                        diurnal_amplitude=0.8, diurnal_period=200.0,
+                        length_dist="fixed", mean_frames=8.0, seed=11)
+    ev = generate_trace(cfg).events
+    span = ev[-1].arrival - ev[0].arrival
+    empirical = span / (len(ev) - 1)
+    assert empirical == pytest.approx(5.0, rel=0.06)
+
+
+def test_fixed_lengths_are_exact():
+    cfg = _sample_config(length_dist="fixed", mean_frames=9.0,
+                         min_frames=1, max_frames=0, flash_crowd_prob=0.0)
+    assert {e.frames for e in generate_trace(cfg).events} == {9}
+
+
+def test_lengths_respect_clamp():
+    cfg = _sample_config(length_dist="pareto", pareto_alpha=1.5,
+                         mean_frames=10.0, min_frames=4, max_frames=32)
+    fr = [e.frames for e in generate_trace(cfg).events]
+    assert min(fr) >= 4 and max(fr) <= 32
+
+
+def test_flash_crowds_cluster_within_span():
+    """With crowds on, some inter-arrival gaps must collapse below the
+    crowd span even though the base mean is far larger."""
+    cfg = TrafficConfig(n_sessions=300, mean_interarrival=50.0,
+                        flash_crowd_prob=0.5, flash_crowd_size=4.0,
+                        flash_crowd_span=3.0, length_dist="fixed",
+                        mean_frames=8.0, seed=2)
+    ev = generate_trace(cfg).events
+    gaps = np.diff([e.arrival for e in ev])
+    # crowds make small gaps common; a plain exp(50) process would put
+    # ~6% of gaps at <= 3 ticks — crowds push that way up
+    assert (gaps <= 3).mean() > 0.3
+    off = TrafficConfig(n_sessions=300, mean_interarrival=50.0,
+                        length_dist="fixed", mean_frames=8.0, seed=2)
+    gaps_off = np.diff([e.arrival for e in generate_trace(off).events])
+    assert (gaps <= 3).mean() > 4 * max((gaps_off <= 3).mean(), 1e-3)
+
+
+@pytest.mark.slow
+def test_lognormal_mean_converges():
+    cfg = TrafficConfig(n_sessions=20_000, mean_interarrival=1.0,
+                        length_dist="lognormal", mean_frames=30.0,
+                        length_sigma=0.6, min_frames=1, max_frames=0,
+                        seed=13)
+    fr = np.asarray([e.frames for e in generate_trace(cfg).events], float)
+    assert fr.mean() == pytest.approx(30.0, rel=0.05)
+
+
+@pytest.mark.slow
+def test_pareto_tail_index_matches():
+    """Hill estimator over the top decile recovers the configured tail
+    index within Monte-Carlo bounds — the draws really are heavy-tailed,
+    not a clipped exponential."""
+    alpha = 2.0
+    cfg = TrafficConfig(n_sessions=20_000, mean_interarrival=1.0,
+                        length_dist="pareto", pareto_alpha=alpha,
+                        mean_frames=20.0, min_frames=1, max_frames=0,
+                        seed=17)
+    fr = np.sort(np.asarray(
+        [e.frames for e in generate_trace(cfg).events], float))[::-1]
+    k = len(fr) // 10
+    hill = 1.0 / np.mean(np.log(fr[:k] / fr[k]))
+    assert hill == pytest.approx(alpha, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# SloController: the state walk the service drives
+# ---------------------------------------------------------------------------
+
+def _controller(**kw):
+    base = dict(target_p99_ticks=50, window=16, breach_patience=2,
+                recover_patience=3, cooldown=3, shed_mode="reject")
+    base.update(kw)
+    return SloController(SloConfig(**base), tiers=(2, 4), start_tier=2)
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError):
+        SloConfig(target_p99_ticks=0)
+    with pytest.raises(ValueError):
+        SloConfig(shed_mode="drop")
+    with pytest.raises(ValueError):
+        SloConfig(degrade_stride=1)
+    with pytest.raises(ValueError):
+        SloConfig(cooldown=2)
+    with pytest.raises(ValueError):
+        SloConfig(shrink_margin=0.0)
+    assert CONTROL_POLICIES == ("demand", "slo")
+    assert SHED_MODES == ("reject", "degrade")
+
+
+def test_slo_grows_then_sheds_then_recovers_then_shrinks():
+    c = _controller()
+    # sustained breach at tier 0 -> grow to 4
+    for p in (1, 1, 1):
+        c.record_first_logit(p, 80)
+    t = 0
+    target = None
+    while target is None:
+        target = c.observe(busy=2, queued=3, tick=t)
+        t += 1
+    assert target == 4 and c.capacity == 4 and not c.shedding
+    # breach persists at the top tier -> shedding switches on
+    t += c.config.cooldown
+    while not c.shedding:
+        c.observe(busy=4, queued=3, tick=t)
+        t += 1
+    assert c.shed_windows == 1
+    assert c.admit(0) == "reject" and c.admit(1) == "accept"
+    # recovery: healthy samples -> un-shed FIRST (no resize that tick)
+    c._samples.clear()
+    for _ in range(8):
+        c.record_first_logit(1, 10)
+    while c.shedding:
+        assert c.observe(busy=1, queued=0, tick=t) is None
+        t += 1
+    assert c.capacity == 4                     # un-shed before any shrink
+    # continued health + demand fitting the lower tier -> SLO-safe shrink
+    target = None
+    while target is None:
+        target = c.observe(busy=1, queued=0, tick=t)
+        t += 1
+    assert target == 2 and c.capacity == 2
+    ev = [(e.old, e.new) for e in c.events]
+    assert ev == [(2, 4), (4, 2)]
+
+
+def test_slo_shrink_requires_healthy_latency():
+    """Low occupancy alone never shrinks — the measured p99 must sit
+    under shrink_margin x target (the SLO-safe half of the contract)."""
+    c = _controller(shrink_margin=0.5)
+    c._idx = 1                                  # start at the top tier
+    for _ in range(8):
+        c.record_first_logit(1, 40)             # healthy vs 50, but > 25
+    for t in range(40):
+        assert c.observe(busy=1, queued=0, tick=t) is None
+    assert c.capacity == 4
+
+
+def test_slo_anticipates_breach_from_queue_age():
+    """A queued session older than target - latency_floor is already
+    committed to breaching; the controller must not wait for the latch."""
+    c = SloController(SloConfig(target_p99_ticks=50, breach_patience=2,
+                                cooldown=3), tiers=(2, 4), start_tier=2,
+                      latency_floor=41)
+    assert c.breached(queue_age=10)            # 10 + 41 > 50
+    assert not c.breached(queue_age=9)
+    c.observe(busy=2, queued=1, tick=0, queue_age=10)
+    assert c.observe(busy=2, queued=1, tick=1, queue_age=11) == 4
+
+
+def test_slo_cooldown_no_thrash():
+    """No second resize can land inside the cooldown window."""
+    c = _controller(cooldown=5)
+    for _ in range(4):
+        c.record_first_logit(1, 90)
+    t = 0
+    while c.observe(busy=2, queued=2, tick=t) is None:
+        t += 1
+    grow_tick = t
+    # now feed perfect health — the shrink must still wait out cooldown
+    c._samples.clear()
+    for _ in range(8):
+        c.record_first_logit(1, 5)
+    for tt in range(grow_tick + 1, grow_tick + 5):
+        assert c.observe(busy=0, queued=0, tick=tt) is None
+    assert all(b.tick - a.tick >= 5
+               for a, b in zip(c.events, c.events[1:]) if True)
+
+
+def test_slo_idle_reset_clears_stale_window():
+    c = _controller()
+    for _ in range(8):
+        c.record_first_logit(1, 500)
+    c.shedding = True
+    c.idle_reset()
+    assert c.measured_p99() is None and not c.shedding
+    assert c.admit(0) == "accept"
+
+
+def test_slo_degrade_mode_counts():
+    c = _controller(shed_mode="degrade", degrade_stride=3)
+    c.shedding = True
+    assert c.admit(0) == "degrade"
+    assert c.admit(1) == "accept"
+    assert c.shed_degraded == 1 and c.shed_rejected == 0
+
+
+def test_slo_protected_p99_prefers_protected_class():
+    c = _controller()
+    for _ in range(4):
+        c.record_first_logit(0, 900)            # low-priority noise
+    c.record_first_logit(1, 30)
+    assert c.measured_p99() == 30.0             # protected only
+    assert c.measured_p99(protected_only=False) == 900.0
+
+
+def test_demand_manager_unchanged_contract():
+    """The demand controller the SLO policy replaces still grows on raw
+    demand with no latency signal at all — the A/B's other arm."""
+    m = CapacityManager(CapacityConfig(tiers=(2, 4), grow_patience=2,
+                                       cooldown=3), start_tier=2)
+    assert m.observe(busy=2, queued=1, tick=0) is None
+    assert m.observe(busy=2, queued=1, tick=1) == 4
+
+
+# ---------------------------------------------------------------------------
+# hypothesis cells (skip cleanly when the library is absent)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=0, max_value=10**6),
+       st.integers(min_value=1, max_value=10**4),
+       st.integers(min_value=0, max_value=3),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_event_roundtrip_property(sid, arrival, frames, priority, clip_seed):
+    e = TraceEvent(sid=sid, arrival=arrival, frames=frames,
+                   priority=priority, clip_seed=clip_seed)
+    assert TraceEvent.from_json(json.loads(json.dumps(e.to_json()))) == e
+
+
+@given(st.lists(st.integers(min_value=0, max_value=10**6), min_size=1,
+                max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_measured_p99_is_order_statistic(samples):
+    c = SloController(SloConfig(window=len(samples)), tiers=(4,))
+    for s in samples:
+        c.record_first_logit(1, s)
+    p99 = c.measured_p99()
+    assert min(samples) <= p99 <= max(samples)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_trace_same_seed_identical_property(seed):
+    cfg = TrafficConfig(n_sessions=8, mean_interarrival=3.0,
+                        flash_crowd_prob=0.4, seed=seed)
+    assert generate_trace(cfg) == generate_trace(cfg)

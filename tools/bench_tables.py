@@ -32,10 +32,14 @@ def render(path: pathlib.Path) -> str:
                # slots, qos, capacity, load, mesh, replicas) — the merge key
             qos = r.get("qos", "fifo")
             label = f"sessions/{r['backend']}/{qos}"
+            if r.get("policy", "demand") != "demand":
+                label += f"/{r['policy']}"
             if r.get("capacity", "fixed") != "fixed":
                 label += f"/{r['capacity']}"
             if r.get("load", "poisson") != "poisson":
-                label += f"[{r['load']}]"
+                # trace replays name the trace; synthetic loads name the shape
+                label += f"[{r['trace'] or r['load']}]" if r.get("trace") \
+                    else f"[{r['load']}]"
             if r.get("mesh", 1) > 1:
                 label += f"/mesh{r['mesh']}"
             if r.get("replicas", 1) > 1:
@@ -56,6 +60,13 @@ def render(path: pathlib.Path) -> str:
                 extra += (f", {r.get('migrations_grow', 0)} grow / "
                           f"{r.get('migrations_shrink', 0)} shrink "
                           f"@ {r.get('migration_ms_mean', 0):.1f}ms")
+            hp = r.get("latency_ms_by_priority", {}).get("1")
+            if r.get("trace") and hp:  # the A/B headline number
+                extra += (f", hp first-logit p99 "
+                          f"{hp['first_logit_p99_ticks']:.0f} ticks")
+            if r.get("policy") == "slo":
+                extra += (f", shed {r.get('sessions_rejected', 0)} rej / "
+                          f"{r.get('sessions_degraded', 0)} deg")
             if "wall_host_s" in r:   # one-dispatch tick rows split the wall
                 extra += (f", wall {r['wall_host_s']:.2f}s host + "
                           f"{r['wall_device_s']:.2f}s device "

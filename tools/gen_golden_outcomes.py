@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Regenerate the golden outcome locks for the checked-in traces.
+
+Replays ``tests/data/traces/smoke.json`` through the (qos × policy)
+matrix on the reference backend and writes the scheduler-tick-level
+outcome summary each cell must reproduce — the per-tick outcome log's
+digest plus the admission/preemption/shed/miss counters, the tier walk
+and the per-class first-logit percentiles — to
+``tests/data/traces/golden_smoke.json``.
+
+Run only when the traces (tools/gen_traces.py) or the scheduler's tick
+semantics *intentionally* change; the golden tests
+(tests/test_traces_golden.py) exist to make unintentional drift loud.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python tools/gen_golden_outcomes.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.agcn import engine  # noqa: E402
+from repro.core.agcn import model as M  # noqa: E402
+from repro.core.pruning.plan import build_prune_plan  # noqa: E402
+from repro.serving.slo import SloConfig  # noqa: E402
+from repro.serving.traffic import Trace, outcome_digest, replay  # noqa: E402
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
+                        "traces")
+
+# one SloConfig for every golden slo cell — 45 ticks sits just above the
+# pipeline's 41-tick first-logit floor, so the smoke burst breaches while
+# its tail is still arriving and the shed path actually fires (the tests
+# assert rejections > 0; a slack bound would let every arrival land
+# before shedding engages)
+GOLDEN_SLO = dict(target_p99_ticks=45, window=16, breach_patience=2,
+                  recover_patience=8, shed_mode="reject")
+GOLDEN_TIERS = (2, 4)
+
+CELLS = [(qos, policy) for qos in ("fifo", "preempt", "deadline")
+         for policy in ("demand", "slo")] + [("fifo", "slo-degrade")]
+
+
+def build_plans(cfg):
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    pp = build_prune_plan(sw, cfg.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                         "cav-70-1", input_skip=2)
+    plan = engine.build_execution_plan(params, cfg, pp, quant=True,
+                                       backend="reference")
+    bn = engine.collect_bn_stats(plan, jax.random.normal(
+        jax.random.PRNGKey(1),
+        (2, cfg.gcn_frames, cfg.gcn_joints, cfg.gcn_in_channels)))
+    return (plan,), (bn,)
+
+
+def cell_row(cfg, trace, plans, bn, qos, policy):
+    shed_mode = "degrade" if policy == "slo-degrade" else "reject"
+    pol = "slo" if policy.startswith("slo") else "demand"
+    out = replay(cfg, trace, backend="reference", qos=qos, policy=pol,
+                 capacity_tiers=GOLDEN_TIERS,
+                 slo_config=(SloConfig(**{**GOLDEN_SLO,
+                                          "shed_mode": shed_mode})
+                             if pol == "slo" else None),
+                 plans=plans, bn_stats=bn, record_outcomes=True)
+    row = {
+        "outcome_digest": outcome_digest(out["outcomes"]),
+        "ticks": out["ticks"],
+        "sessions": out["sessions"],
+        "preemptions": out["preemptions"],
+        "restores": out["restores"],
+        "deadline_missed": out["deadline_missed"],
+        "migrations": out["resize_events"],
+        "capacity_final": out["capacity_final"],
+        "per_priority": {
+            p: {"n": d["n"],
+                "first_logit_p50_ticks": d["first_logit_p50_ticks"],
+                "first_logit_p99_ticks": d["first_logit_p99_ticks"],
+                "e2e_p99_ticks": d["e2e_p99_ticks"]}
+            for p, d in out["latency_ms_by_priority"].items()},
+    }
+    if pol == "slo":
+        row["sessions_rejected"] = out["sessions_rejected"]
+        row["sessions_degraded"] = out["sessions_degraded"]
+        row["shed_windows"] = out["shed_windows"]
+    return row
+
+
+def main():
+    cfg = get_config("agcn-2s", reduced=True)
+    trace = Trace.load(os.path.join(DATA_DIR, "smoke.json"))
+    plans, bn = build_plans(cfg)
+    golden = {"trace": trace.name, "trace_digest": trace.digest(),
+              "tiers": list(GOLDEN_TIERS), "slo": GOLDEN_SLO, "cells": {}}
+    for qos, policy in CELLS:
+        row = cell_row(cfg, trace, plans, bn, qos, policy)
+        golden["cells"][f"{qos}/{policy}"] = row
+        print(f"{qos}/{policy}: digest={row['outcome_digest'][:12]} "
+              f"ticks={row['ticks']} sessions={row['sessions']} "
+              f"migrations={row['migrations']}")
+    path = os.path.join(DATA_DIR, "golden_smoke.json")
+    with open(path, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
