@@ -76,6 +76,60 @@ def main():
     emit("kernels/graph_sconv_pallas", t_k, "fused G-matmul+1x1 (1 HBM pass)")
     emit("kernels/graph_sconv_ref", t_r, "")
 
+    # CSR vs dense spatial conv over skeleton widths × graph densities: the
+    # variable-topology compiler picks CSR per block when the merged graph's
+    # density falls below csr_density (0.5 default) — these rows measure the
+    # crossover that threshold encodes.  The registry graphs give the
+    # natural-skeleton density; the synthetic d25/d50 graphs sweep toward
+    # the selector boundary.
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.core.agcn.graph import dense_to_csr, get_topology
+
+    Cin = Cout = 16
+    N, T = 2, 16
+    rng = np.random.default_rng(7)
+    for tname in ("ntu25", "ntu50"):
+        topo = get_topology(tname)
+        V, K = topo.num_joints, topo.num_subsets
+        w = jnp.asarray(rng.standard_normal((K, Cin, Cout)), jnp.float32)
+        xg = jnp.asarray(rng.standard_normal((N, T, V, Cin)), jnp.float32)
+        xr = xg.reshape(-1, V, Cin)
+        sweeps = [(f"d{int(round(topo.density * 100)):02d}", topo.adjacency)]
+        for target in (0.25, 0.50):
+            mask = rng.random((K, V, V)) < target
+            sweeps.append((f"d{int(target * 100):02d}",
+                           (rng.standard_normal((K, V, V)) * mask)
+                           .astype(np.float32)))
+        for tag, g in sweeps:
+            dens = float((np.abs(g) > 0).mean())
+            indptr, indices, values = dense_to_csr(g)
+            vp = -(-V // 8) * 8
+            idx, val = ops.pack_csr_ell(indptr, indices, values, vp)
+            gj, ip, ix, vl, ej, ev = map(
+                jnp.asarray, (g, indptr, indices, values, idx, val))
+            t_d = time_fn(lambda a, g_=gj: ref.graph_sconv_ref(a, g_, w),
+                          xr, iters=3)
+            t_c = time_fn(
+                lambda a, p=ip, i=ix, v=vl:
+                    ref.graph_sconv_csr_ref(a, p, i, v, w), xr, iters=3)
+            emit(f"kernels/sconv_csr/{tname}/{tag}/dense_ref", t_d,
+                 f"V={V} density={dens:.2f}")
+            emit(f"kernels/sconv_csr/{tname}/{tag}/csr_ref", t_c,
+                 f"nnz_skip={(1 - dens) * 100:.0f}%")
+            t_d = time_fn(lambda a, g_=gj: ops.graph_sconv(a, g_, w),
+                          xg, iters=3)
+            t_c = time_fn(
+                lambda a, e=ej, v=ev: ops.graph_sconv_csr(a, e, v, w),
+                xg, iters=3)
+            emit(f"kernels/sconv_csr/{tname}/{tag}/dense_pallas", t_d,
+                 f"V={V} density={dens:.2f}")
+            emit(f"kernels/sconv_csr/{tname}/{tag}/csr_pallas", t_c,
+                 f"ell_deg={idx.shape[-1]} "
+                 f"nnz_skip={(1 - dens) * 100:.0f}%")
+
     # backend comparison: full-model forward through the engine, identical
     # ExecutionPlan flow for both backends (parity is locked by test_engine)
     xm = jax.random.normal(jax.random.PRNGKey(4), (8, cfg.gcn_frames, 25, 3))

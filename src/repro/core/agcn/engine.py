@@ -42,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.core.agcn.graph import build_ntu_subsets, similarity_graph
+from repro.core.agcn.graph import (GraphTopology, dense_to_csr, get_topology,
+                                   similarity_graph)
 from repro.core.pruning.plan import PrunePlan
 from repro.core.quant import quantize_q88
 from repro.kernels import ops
@@ -67,6 +68,7 @@ class BlockStatic:
     use_ck: bool
     pruned_in: bool          # kept_in gather present
     pruned_filters: bool     # kept_filters scatter present
+    sconv: str = "dense"     # spatial-conv path: "dense" | "csr"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +89,9 @@ class PlanStatic:
     stream_pool: int         # streaming logit pool: 0 = cumulative (clip
                              # parity), W > 0 = sliding window of W frames
     blocks: Tuple[BlockStatic, ...]
+    topology: str = "ntu25"  # skeleton this plan was compiled for
+    valid_joints: int = 0    # topology's own V (<= joints when slab-padded;
+                             # 0 = legacy plan, treated as == joints)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -220,8 +225,14 @@ def _gather_in(x: jnp.ndarray, ba: Dict[str, Any]) -> jnp.ndarray:
 
 def _spatial_einsum(x: jnp.ndarray, ba: Dict[str, Any],
                     bs: BlockStatic) -> jnp.ndarray:
-    """Reference math for Σ_k (G_k·x)·W_k (+ optional data-dependent C_k)."""
+    """Reference math for Σ_k (G_k·x)·W_k (+ optional data-dependent C_k).
+
+    A plan padded to a slab Vmax may be run on a clip at the topology's own
+    joint count (BN calibration); the padded graph is zero outside its
+    valid joints, so slicing it down to x's V is exact."""
     G = ba["G"].astype(x.dtype)
+    if G.shape[-1] != x.shape[2]:
+        G = G[:, : x.shape[2], : x.shape[2]]
     Wk = ba["Wk"].astype(x.dtype)
     if bs.use_ck:
         Ck = similarity_graph(x, ba["theta"], ba["phi"])
@@ -231,14 +242,36 @@ def _spatial_einsum(x: jnp.ndarray, ba: Dict[str, Any],
     return jnp.einsum("ntvc,kwv,kco->ntwo", x, G, Wk)
 
 
+def _spatial_csr_ref(x: jnp.ndarray, ba: Dict[str, Any],
+                     bs: BlockStatic) -> jnp.ndarray:
+    """Reference CSR spatial conv: gather-accumulate over the plan's
+    indptr/indices.  The CSR is built at the topology's own V; when x runs
+    wider (slab-padded frames) the extra output rows are zero-padded back —
+    exact, because the graph never references padded joints."""
+    from repro.kernels import ref as _ref
+
+    N, T, V, C = x.shape
+    Wk = ba["Wk"].astype(x.dtype)
+    out = _ref.graph_sconv_csr_ref(
+        x.reshape(N * T, V, C), ba["csr_indptr"], ba["csr_indices"],
+        ba["csr_values"].astype(x.dtype), Wk)
+    if out.shape[1] < V:
+        out = jnp.pad(out, ((0, 0), (0, V - out.shape[1]), (0, 0)))
+    return out.reshape(N, T, V, -1)
+
+
 class ReferenceBackend:
     """Pure-jnp path — today's model math, executed from the plan."""
 
     name = "reference"
 
     def spatial(self, x, ba, bs):
-        """Kept-channel gather + the Σ_k (G_k·x)·W_k einsum (optional C_k)."""
-        return _spatial_einsum(_gather_in(x, ba), ba, bs)
+        """Kept-channel gather + the Σ_k (G_k·x)·W_k einsum (optional C_k),
+        or the CSR gather-accumulate when the plan chose ``sconv="csr"``."""
+        xg = _gather_in(x, ba)
+        if bs.sconv == "csr" and not bs.use_ck:
+            return _spatial_csr_ref(xg, ba, bs)
+        return _spatial_einsum(xg, ba, bs)
 
     def temporal(self, x, ba, bs):
         """Dense masked temporal conv, 'same' padding, stride on T; pruned
@@ -288,10 +321,14 @@ class PallasBackend:
 
     def spatial(self, x, ba, bs):
         """Fused graph+1×1 kernel (``ops.graph_sconv``) on the padded
-        (K, Vp, Vp) plan graph; C_k blocks fall back to the einsum."""
+        (K, Vp, Vp) plan graph, or the ELL gather kernel when the plan
+        chose ``sconv="csr"``; C_k blocks fall back to the einsum."""
         xg = _gather_in(x, ba)
         if bs.use_ck:
             return _spatial_einsum(xg, ba, bs)
+        if bs.sconv == "csr":
+            return ops.graph_sconv_csr(xg, ba["ell_idx"], ba["ell_val"],
+                                       ba["Wk"], interpret=self.interpret)
         return ops.graph_sconv(xg, ba["Gp"], ba["Wk"],
                                interpret=self.interpret)
 
@@ -363,6 +400,16 @@ def _to_numpy(x) -> np.ndarray:
             "packing is host-side (plan-compile-then-execute)") from e
 
 
+def _graph_density(g, eps: float) -> Optional[float]:
+    """Fraction of |entries| > eps, or None when ``g`` is a tracer (plan
+    build inside jit — the train path — cannot measure density)."""
+    try:
+        gn = np.asarray(g)
+    except jax.errors.TracerArrayConversionError:
+        return None
+    return float((np.abs(gn) > eps).mean())
+
+
 def build_execution_plan(
     params: Dict[str, Any],
     cfg: ModelConfig,
@@ -372,6 +419,11 @@ def build_execution_plan(
     backend: str = "reference",
     interpret: bool = True,
     use_rfc: Optional[bool] = None,
+    topology: Optional[Any] = None,
+    pad_joints: Optional[int] = None,
+    sconv: str = "auto",
+    csr_eps: float = 0.0,
+    csr_density: float = 0.5,
 ) -> ExecutionPlan:
     """Compile ``(params, PrunePlan, ModelConfig)`` into an ExecutionPlan.
 
@@ -382,16 +434,40 @@ def build_execution_plan(
     per-block shape bookkeeping.  Building is pure: same inputs produce an
     identical plan (leaf-for-leaf), so jitted steps taking the plan as an
     argument never retrace across rebuilds.
+
+    Variable topology: ``topology`` names a registry skeleton (or passes a
+    :class:`~repro.core.agcn.graph.GraphTopology` directly; default
+    ``ntu25``) and ``pad_joints`` pads every joint-indexed plan array to a
+    wider slab width Vmax so plans for different skeletons share one slab —
+    padded rows/cols are zero, so the math at the topology's own joints is
+    unchanged.  ``sconv`` picks the per-block spatial-conv path: ``dense``
+    (padded matmul), ``csr`` (gather-accumulate over the measured nonzero
+    entries of ``A + B_k``), or ``auto`` — CSR when the fraction of
+    ``|G| > csr_eps`` entries is at most ``csr_density``, dense otherwise
+    (with zero ``csr_eps`` the learned dense B_k keeps every graph at
+    density 1.0, so auto picks dense — today's path — until B_k is
+    thresholded).
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
+    if sconv not in ("auto", "dense", "csr"):
+        raise ValueError(f"unknown sconv mode {sconv!r}")
     from repro.core.agcn.model import AGCN_STRIDES  # no import cycle: model
     strides = cfg.gcn_strides or AGCN_STRIDES       # lazily imports engine
-    V = cfg.gcn_joints
+    if isinstance(topology, GraphTopology):
+        topo = topology
+    else:
+        topo = get_topology(topology or "ntu25", cfg.gcn_kv)
+    vj = topo.num_joints                            # topology's own V
+    V = int(pad_joints) if pad_joints is not None else vj
+    if V < vj:
+        raise ValueError(
+            f"pad_joints={V} is narrower than topology {topo.name!r} "
+            f"(V={vj})")
     Vp = ((V + 7) // 8) * 8
     # host-side numpy graph build — stays concrete even under a jit trace
     # (the reference backend's plan build is traced by the train path)
-    A = build_ntu_subsets(cfg.gcn_kv).astype(np.float32)
+    A = topo.adjacency.astype(np.float32)
 
     blocks_a: List[Dict[str, Any]] = []
     blocks_s: List[BlockStatic] = []
@@ -402,7 +478,18 @@ def build_execution_plan(
         use_ck = bool(cfg.use_ck and "theta" in blk)
 
         # --- spatial: graph precompute + kept-channel gather + quant ------
-        G = jnp.asarray(A, jnp.float32) + blk["Bk"].astype(jnp.float32)
+        if int(blk["Bk"].shape[-1]) != vj:
+            raise ValueError(
+                f"block {b}: learned graph B_k is "
+                f"{tuple(blk['Bk'].shape)} but topology {topo.name!r} has "
+                f"V={vj} joints — params were built for a different "
+                f"topology")
+        Gv = jnp.asarray(A, jnp.float32) + blk["Bk"].astype(jnp.float32)
+        if V != vj:     # pad to the slab width; padded joints stay isolated
+            G = jnp.zeros((Gv.shape[0], V, V),
+                          jnp.float32).at[:, :vj, :vj].set(Gv)
+        else:
+            G = Gv
         Wk = blk["Wk"]
         if quant:
             Wk = quantize_q88(Wk)
@@ -430,6 +517,19 @@ def build_execution_plan(
             tw = tw * jnp.asarray(tap_mask, tw.dtype)[:, None, :]
         n_kept = int(tw.shape[0])
 
+        # --- spatial path selection: dense padded vs CSR ------------------
+        block_sconv = "dense"
+        if sconv != "dense" and not use_ck:
+            density = _graph_density(Gv, csr_eps)
+            if sconv == "csr":
+                if density is None:
+                    raise ValueError(
+                        "sconv='csr' plans must be built outside jit: CSR "
+                        "packing is host-side (plan-compile-then-execute)")
+                block_sconv = "csr"
+            elif density is not None and density <= csr_density:
+                block_sconv = "csr"
+
         ba: Dict[str, Any] = {
             "G": G, "Wk": Wk, "kept_in": kept_in,
             "theta": theta, "phi": phi,
@@ -438,12 +538,30 @@ def build_execution_plan(
             "down_w": blk.get("down_w"), "bn_down": blk.get("bn_down"),
             "short_w": blk.get("short_w"), "bn_short": blk.get("bn_short"),
             "Gp": None, "wp": None, "taps": None, "inv_perm": None,
+            "csr_indptr": None, "csr_indices": None, "csr_values": None,
+            "ell_idx": None, "ell_val": None,
         }
 
+        if block_sconv == "csr":
+            # entries with |G| <= csr_eps (the dense B_k noise floor when
+            # eps > 0) are dropped — that is the CSR/dense parity budget
+            indptr, indices, values = dense_to_csr(np.asarray(Gv), csr_eps)
+            if backend == "pallas":
+                ei, ev = ops.pack_csr_ell(indptr, indices, values, Vp)
+                ba["ell_idx"] = jnp.asarray(ei)
+                ba["ell_val"] = jnp.asarray(ev)
+            else:
+                ba["csr_indptr"] = jnp.asarray(indptr)
+                ba["csr_indices"] = jnp.asarray(indices)
+                ba["csr_values"] = jnp.asarray(values)
+            ba["G"] = None          # the CSR paths never read the dense form
+
         if backend == "pallas":
-            # padded graph (K, Vp, Vp): the kernel's sublane-aligned layout
-            Gp = jnp.zeros((G.shape[0], Vp, Vp), G.dtype)
-            ba["Gp"] = Gp.at[:, :V, :V].set(G)
+            if block_sconv == "dense":
+                # padded graph (K, Vp, Vp): the kernel's sublane-aligned
+                # layout
+                Gp = jnp.zeros((G.shape[0], Vp, Vp), G.dtype)
+                ba["Gp"] = Gp.at[:, :V, :V].set(G)
             # host-side cavity packing — dense blocks pack the full 9 taps
             wp, taps, inv = ops.pack_cavity_weights(
                 _to_numpy(tw), tap_mask[:n_kept] if pb is not None
@@ -465,6 +583,7 @@ def build_execution_plan(
             tkernel=int(cfg.gcn_tkernel), use_ck=use_ck,
             pruned_in=kept_in is not None,
             pruned_filters=kept_filters is not None,
+            sconv=block_sconv,
         ))
 
     input_skip = (prune_plan.input_skip if prune_plan is not None
@@ -478,11 +597,28 @@ def build_execution_plan(
         joints=int(V), in_channels=int(cfg.gcn_in_channels),
         stream_pool=int(cfg.gcn_stream_pool),
         blocks=tuple(blocks_s),
+        topology=topo.name, valid_joints=int(vj),
     )
+    data_bn = params["data_bn"]
+    C = int(cfg.gcn_in_channels)
+    if V != vj:
+        # joint-major (V*C) flattened stem BN: pad scale->1 / bias->0 so the
+        # padded joints pass through as identity (they are masked anyway)
+        pad = (V - vj) * C
+        data_bn = {
+            "scale": jnp.concatenate(
+                [data_bn["scale"], jnp.ones((pad,), data_bn["scale"].dtype)]),
+            "bias": jnp.concatenate(
+                [data_bn["bias"], jnp.zeros((pad,), data_bn["bias"].dtype)]),
+        }
+    # parent map (slab width, pad rows self-parent) — the bone-stream gather
+    parents = np.arange(V, dtype=np.int32)
+    parents[:vj] = topo.parents
     arrays = {
-        "data_bn": params["data_bn"],
+        "data_bn": data_bn,
         "blocks": blocks_a,
         "fc_w": params["fc_w"], "fc_b": params["fc_b"],
+        "parents": jnp.asarray(parents),
     }
     return ExecutionPlan(arrays=arrays, static=static)
 
@@ -491,13 +627,23 @@ def build_execution_plan(
 # execution (clip mode)
 # ---------------------------------------------------------------------------
 
+def _slice_data_bn(p: Dict[str, jnp.ndarray], width: int):
+    """Match the joint-major (V*C) stem BN params to a narrower clip: a
+    slab-padded plan calibrates at the topology's own V, and the padding
+    tail (scale 1 / bias 0) carries no information."""
+    if p["scale"].shape[0] == width:
+        return p
+    return {k: v[:width] for k, v in p.items()}
+
+
 def _stem(arrays, x, input_skip: int, bn=_bn_live) -> jnp.ndarray:
     x = x.astype(arrays["data_bn"]["scale"].dtype)
     if input_skip > 1:
         x = x[:, ::input_skip]            # C5 input-skipping (frame sampling)
     N, T, V, C = x.shape
     h = x.reshape(N, T, V * C)
-    return bn("data_bn", h, arrays["data_bn"]).reshape(N, T, V, C)
+    p = _slice_data_bn(arrays["data_bn"], V * C)
+    return bn("data_bn", h, p).reshape(N, T, V, C)
 
 
 def _run_block(h, ba, bs, backend: Backend, bn=_bn_live, tag: str = ""):
@@ -622,6 +768,26 @@ class StreamState:
         return cls(*children)
 
 
+def _pad_data_bn_stats(bn_stats: Dict[str, Dict[str, Any]],
+                       ps: PlanStatic) -> Dict[str, Dict[str, Any]]:
+    """Pad the stem BN statistics of a topology-V calibration to the slab
+    width (mean 0 / inv 1 — identity on the masked padded joints).  All
+    other sites are per-channel (C,) and joint-count independent."""
+    want = ps.joints * ps.in_channels
+    db = bn_stats.get("data_bn")
+    if db is None or db["mean"].shape[0] == want:
+        return bn_stats
+    pad = want - db["mean"].shape[0]
+    out = dict(bn_stats)
+    out["data_bn"] = {
+        "mean": jnp.concatenate(
+            [db["mean"], jnp.zeros((pad,), db["mean"].dtype)]),
+        "inv": jnp.concatenate(
+            [db["inv"], jnp.ones((pad,), db["inv"].dtype)]),
+    }
+    return out
+
+
 def init_stream_state(
     plan: ExecutionPlan,
     batch: int,
@@ -651,6 +817,7 @@ def init_stream_state(
                 "representative clip batch) or bn_stats from "
                 "collect_bn_stats()")
         bn_stats = collect_bn_stats(plan, x_calib)
+    bn_stats = _pad_data_bn_stats(bn_stats, ps)
     K, V = ps.tkernel, ps.joints
     blocks = []
     for bs in ps.blocks:
@@ -898,6 +1065,7 @@ def fused_tick(
     snap_order,                      # (E, 2) int32 (slot, ring row) padded
     rest_order,                      # (E, 2) int32 (slot, ring row) padded
     snap_ring: Dict[str, Any],       # init_snapshot_ring state
+    bn_stats: Optional[Dict[str, Dict[str, Any]]] = None,
 ) -> Tuple[StreamState, jnp.ndarray, Dict[str, Any]]:
     """One serving tick as a single device dispatch: snapshot gathers,
     restore scatters, admission resets, hold masking and the slab step,
@@ -921,7 +1089,8 @@ def fused_tick(
     ever touch the returned ones."""
     new_ring = snapshot_to_ring(slab, snap_ring, snap_order)
     slab = restore_from_ring(slab, new_ring, rest_order)
-    new_slab, logits = step_frames(plan, slab, frames, valid, reset, hold)
+    new_slab, logits = step_frames(plan, slab, frames, valid, reset, hold,
+                                   bn_stats=bn_stats)
     return new_slab, logits, new_ring
 
 
@@ -980,6 +1149,7 @@ def step_frame(
     state: StreamState,
     frame: jnp.ndarray,              # (S, V, C) one raw frame per slot
     valid=True,                      # False -> flush step (post-clip drain)
+    bn_stats: Optional[Dict[str, Dict[str, Any]]] = None,
 ) -> Tuple[StreamState, jnp.ndarray]:
     """Advance every stream slot by one raw frame; returns (state, logits).
 
@@ -988,6 +1158,18 @@ def step_frame(
     own clip/flush phase; False slots take the zero-padding drain path).
     Because every clock in the state is per-slot, slots admitted at
     different times decimate, emit and pool independently.
+
+    ``bn_stats`` overrides the slab's frozen calibration for this step —
+    the multi-topology service runs one dispatch per skeleton group over
+    the same slab, each with its own topology's statistics (padded to the
+    slab width here).  ``None`` keeps the state's own stats (the single-
+    topology path, unchanged).
+
+    A plan whose topology is narrower than the slab (``valid_joints`` <
+    ``joints``) masks the padded joint rows after the stem and after each
+    block's ReLUs — BN bias would otherwise leak nonzero values into them
+    — and pools logits over the valid joints only, so a session's logits
+    equal its dedicated narrow-slab run.
 
     Pure and jit-stable: the plan and state ride as pytree arguments, all
     data-dependent control (input-skip gaps, stride-decimated emission,
@@ -1000,12 +1182,16 @@ def step_frame(
 
     ps = plan.static
     backend = get_backend(ps.backend, ps.interpret)
-    bn = _BNFrozen(state.bn_stats)
+    stats = (state.bn_stats if bn_stats is None
+             else _pad_data_bn_stats(bn_stats, ps))
+    bn = _BNFrozen(stats)
     K = ps.tkernel
     pad = K // 2
     nblocks = len(ps.blocks)
     S = frame.shape[0]
     rows = jnp.arange(S)
+    vj = ps.valid_joints or ps.joints
+    vmask = vj < ps.joints               # mask padded joints (static)
 
     valid = jnp.broadcast_to(jnp.asarray(valid, bool), (S,))
     process = (state.t_raw % ps.input_skip) == 0      # C5 input skipping (S,)
@@ -1013,6 +1199,8 @@ def step_frame(
     in_valid = jnp.logical_and(valid, process)
     frame = constrain(frame, "batch", None, None)
     h_in = _stem_frame(plan.arrays, frame, bn)
+    if vmask:
+        h_in = h_in.at[:, vj:, :].set(0.0)
 
     new_blocks: List[Dict[str, Any]] = []
     new_rfc: List[Dict[str, Any]] = []
@@ -1032,6 +1220,8 @@ def step_frame(
                    ba["bn_down"])
                 if ba["down_w"] is not None else h_in)
         s = jax.nn.relu(s + down)
+        if vmask:          # BN bias injects nonzero values at padded joints
+            s = s.at[:, vj:, :].set(0.0)
         # invalid inputs become the clip conv's zero padding at this level
         s = jnp.where(in_valid[:, None, None], s, 0.0)
 
@@ -1069,6 +1259,8 @@ def step_frame(
         else:
             res = h_c
         out = jax.nn.relu(out + res)
+        if vmask:
+            out = out.at[:, vj:, :].set(0.0)
         out_valid = jnp.take_along_axis(vring, center[:, None], axis=1)[:, 0]
 
         # --- inter-block transfer: the RFC format, frame-wise -------------
@@ -1089,7 +1281,8 @@ def step_frame(
 
     # --- running temporal logit pool (per slot) ---------------------------
     take = jnp.logical_and(emit, out_valid)            # (S,)
-    contrib = out.mean(axis=1)                         # (S, C_last): V pooled
+    contrib = out[:, :vj].mean(axis=1)                 # (S, C_last): valid
+                                                       # joints pooled
     if ps.stream_pool > 0:
         W = ps.stream_pool
         pslot = state.pool_t % W                       # (S,)
@@ -1121,6 +1314,7 @@ def step_frames(
     valid,                           # (S,) bool — per-slot clip/flush phase
     reset=None,                      # optional (S,) bool — admission reset
     hold=None,                       # optional (S,) bool — freeze the slot
+    bn_stats: Optional[Dict[str, Dict[str, Any]]] = None,
 ) -> Tuple[StreamState, jnp.ndarray]:
     """One scheduler tick of the session slab; returns (slab, logits[S]).
 
@@ -1142,7 +1336,7 @@ def step_frames(
     (``repro.serving``) reads it at eviction time."""
     if reset is not None:
         slab = reset_slots(slab, reset)
-    new, logits = step_frame(plan, slab, frames, valid)
+    new, logits = step_frame(plan, slab, frames, valid, bn_stats=bn_stats)
     if hold is not None:
         from repro.distributed.sharding import constrain
 

@@ -11,6 +11,9 @@ Three graphs per layer & subset k:
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -39,17 +42,19 @@ def _hop_distance(num_joints: int, edges) -> np.ndarray:
     return dist
 
 
-def build_ntu_subsets(num_subsets: int = 3) -> np.ndarray:
-    """Return A of shape (K, V, V): identity / centripetal / centrifugal
-    subsets, each column-normalized (D^-1 A as in ST-GCN)."""
-    V = NUM_JOINTS
-    dist = _hop_distance(V, NTU_EDGES)
+def build_subsets(edges, center: int, num_joints: int,
+                  num_subsets: int = 3) -> np.ndarray:
+    """Return A of shape (K, V, V) for an arbitrary skeleton: identity /
+    centripetal / centrifugal subsets split by hop distance to ``center``
+    (1-indexed), each column-normalized (D^-1 A as in ST-GCN)."""
+    V = num_joints
+    dist = _hop_distance(V, edges)
     adj1 = (dist <= 1).astype(np.float64)       # self + 1-hop
     # normalize: A_norm[i,j] = adj[i,j] / indegree(j)
     deg = adj1.sum(0)
     norm = adj1 / np.maximum(deg[None, :], 1)
 
-    center_d = dist[:, NTU_CENTER - 1]
+    center_d = dist[:, center - 1]
     subsets = np.zeros((num_subsets, V, V), dtype=np.float64)
     for i in range(V):
         for j in range(V):
@@ -62,6 +67,12 @@ def build_ntu_subsets(num_subsets: int = 3) -> np.ndarray:
             else:
                 subsets[2, i, j] = norm[i, j]           # centrifugal
     return subsets.astype(np.float32)
+
+
+def build_ntu_subsets(num_subsets: int = 3) -> np.ndarray:
+    """Return A of shape (K, V, V) for the NTU 25-joint skeleton: identity
+    / centripetal / centrifugal subsets, each column-normalized."""
+    return build_subsets(NTU_EDGES, NTU_CENTER, NUM_JOINTS, num_subsets)
 
 
 def static_graph(num_subsets: int = 3) -> jnp.ndarray:
@@ -87,3 +98,168 @@ def similarity_graph(x: jnp.ndarray, w_theta: jnp.ndarray, w_phi: jnp.ndarray) -
     m = jnp.max(logits, axis=-1, keepdims=True)
     e = jnp.exp(logits - m)
     return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Variable-topology support: first-class GraphTopology + registry.
+# ---------------------------------------------------------------------------
+
+def dense_to_csr(a: np.ndarray, eps: float = 0.0):
+    """Convert a dense (K, V, V) subset stack to per-k CSR over output rows.
+
+    Row w of subset k holds the input joints v with ``|a[k, w, v]| > eps``.
+    Returns ``(indptr (K, V+1) int32, indices (K, E) int32, values (K, E)
+    float32)`` where E is the max nnz over k and shorter subsets are
+    zero-padded (a zero value is a no-op in the gather-accumulate).
+    """
+    a = np.asarray(a)
+    K, V, _ = a.shape
+    per_k = []
+    for k in range(K):
+        rows, cols = np.nonzero(np.abs(a[k]) > eps)
+        per_k.append((rows.astype(np.int64), cols.astype(np.int64),
+                      a[k][rows, cols].astype(np.float32)))
+    E = max(1, max(len(r) for r, _, _ in per_k))
+    indptr = np.zeros((K, V + 1), np.int32)
+    indices = np.zeros((K, E), np.int32)
+    values = np.zeros((K, E), np.float32)
+    for k, (rows, cols, vals) in enumerate(per_k):
+        counts = np.bincount(rows, minlength=V)
+        indptr[k, 1:] = np.cumsum(counts)
+        indices[k, : len(cols)] = cols       # np.nonzero is already row-major
+        values[k, : len(vals)] = vals
+    return indptr, indices, values
+
+
+def csr_to_dense(indptr: np.ndarray, indices: np.ndarray,
+                 values: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`dense_to_csr` — rebuild the (K, V, V) stack."""
+    K, V1 = np.asarray(indptr).shape
+    V = V1 - 1
+    out = np.zeros((K, V, V), np.float32)
+    for k in range(K):
+        for w in range(V):
+            lo, hi = int(indptr[k, w]), int(indptr[k, w + 1])
+            out[k, w, indices[k, lo:hi]] += values[k, lo:hi]
+    return out
+
+
+def parents_from_edges(edges, num_joints: int) -> np.ndarray:
+    """(V,) int32 parent index (0-indexed) per joint; roots parent
+    themselves so the bone vector ``x - x[parents]`` is zero there."""
+    parents = np.arange(num_joints, dtype=np.int32)
+    for joint, parent in edges:
+        parents[joint - 1] = parent - 1
+    return parents
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GraphTopology:
+    """A skeleton graph the engine can compile an ExecutionPlan for.
+
+    Holds the dense normalized subset stack *and* its CSR factorization so
+    the spatial conv can pick either path per block, plus the parent map
+    that generalizes the bone stream and a joint-validity mask used when
+    this topology rides in a slab padded to a wider ``Vmax``.
+    """
+
+    name: str
+    num_joints: int
+    center: int
+    edges: Tuple[Tuple[int, int], ...]
+    parents: np.ndarray        # (V,) int32, 0-indexed, roots self-parent
+    adjacency: np.ndarray      # (K, V, V) float32 normalized subsets
+    indptr: np.ndarray         # (K, V+1) int32 CSR row pointers
+    indices: np.ndarray        # (K, E) int32 CSR column indices
+    values: np.ndarray         # (K, E) float32 CSR values
+    valid: np.ndarray          # (V,) bool joint-validity mask
+
+    @property
+    def num_subsets(self) -> int:
+        """K, the number of spatial-configuration subsets."""
+        return int(self.adjacency.shape[0])
+
+    @property
+    def density(self) -> float:
+        """Fraction of nonzero entries in the normalized adjacency."""
+        return 1.0 - graph_sparsity(self.adjacency)
+
+    def padded_valid(self, vmax: int) -> np.ndarray:
+        """(vmax,) bool mask — this topology's joints inside a Vmax slab."""
+        out = np.zeros(vmax, bool)
+        out[: self.num_joints] = self.valid
+        return out
+
+
+def make_topology(name: str, edges: Sequence[Tuple[int, int]], center: int,
+                  num_joints: int, num_subsets: int = 3) -> GraphTopology:
+    """Build a :class:`GraphTopology` from a 1-indexed bone list."""
+    adjacency = build_subsets(edges, center, num_joints, num_subsets)
+    indptr, indices, values = dense_to_csr(adjacency)
+    return GraphTopology(
+        name=name,
+        num_joints=num_joints,
+        center=center,
+        edges=tuple((int(j), int(p)) for j, p in edges),
+        parents=parents_from_edges(edges, num_joints),
+        adjacency=adjacency,
+        indptr=indptr,
+        indices=indices,
+        values=values,
+        valid=np.ones(num_joints, bool),
+    )
+
+
+def _ntu50_edges():
+    """Two-person NTU scene: block-diagonal person graphs plus one
+    inter-person link tying person 2's spine to person 1's spine."""
+    edges = list(NTU_EDGES)
+    edges += [(j + NUM_JOINTS, p + NUM_JOINTS) for j, p in NTU_EDGES]
+    edges.append((NTU_CENTER + NUM_JOINTS, NTU_CENTER))
+    return edges
+
+
+# 21-joint hand: wrist (1) plus five 4-joint finger chains.
+HAND_EDGES = [
+    (2, 1), (3, 2), (4, 3), (5, 4),          # thumb
+    (6, 1), (7, 6), (8, 7), (9, 8),          # index
+    (10, 1), (11, 10), (12, 11), (13, 12),   # middle
+    (14, 1), (15, 14), (16, 15), (17, 16),   # ring
+    (18, 1), (19, 18), (20, 19), (21, 20),   # pinky
+]
+
+
+def _body_hand46_edges():
+    """Mixed body+hand graph: the NTU body with a 21-joint hand grafted
+    onto the right-hand joint (NTU joint 12)."""
+    edges = list(NTU_EDGES)
+    edges += [(j + NUM_JOINTS, p + NUM_JOINTS) for j, p in HAND_EDGES]
+    edges.append((1 + NUM_JOINTS, 12))       # hand wrist -> body right hand
+    return edges
+
+
+_TOPOLOGY_SPECS = {
+    "ntu25": (NTU_EDGES, NTU_CENTER, NUM_JOINTS),
+    "ntu50": (_ntu50_edges(), NTU_CENTER, 2 * NUM_JOINTS),
+    "hand21": (HAND_EDGES, 1, 21),
+    "body_hand46": (_body_hand46_edges(), NTU_CENTER, NUM_JOINTS + 21),
+}
+_TOPOLOGY_CACHE: Dict[Tuple[str, int], GraphTopology] = {}
+
+
+def topology_names() -> Tuple[str, ...]:
+    """Names of the registered skeleton topologies."""
+    return tuple(_TOPOLOGY_SPECS)
+
+
+def get_topology(name: str, num_subsets: int = 3) -> GraphTopology:
+    """Fetch (and cache) a registry topology by name."""
+    key = (name, num_subsets)
+    if key not in _TOPOLOGY_CACHE:
+        if name not in _TOPOLOGY_SPECS:
+            raise KeyError(
+                f"unknown topology {name!r}; registered: {topology_names()}")
+        edges, center, num_joints = _TOPOLOGY_SPECS[name]
+        _TOPOLOGY_CACHE[key] = make_topology(
+            name, edges, center, num_joints, num_subsets)
+    return _TOPOLOGY_CACHE[key]

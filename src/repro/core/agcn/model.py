@@ -149,12 +149,22 @@ def init_stream(
 
 
 def bone_stream(x: jnp.ndarray) -> jnp.ndarray:
-    """Second stream of 2s-AGCN: bone vectors = joint − parent joint."""
+    """Second stream of 2s-AGCN: bone vectors = joint − parent joint
+    (the fixed NTU-25 skeleton; see :func:`bone_stream_parents` for any
+    other topology)."""
     from repro.core.agcn.graph import NTU_EDGES
     out = jnp.zeros_like(x)
     for j, p in NTU_EDGES:
         out = out.at[..., j - 1, :].set(x[..., j - 1, :] - x[..., p - 1, :])
     return out
+
+
+def bone_stream_parents(x: jnp.ndarray, parents) -> jnp.ndarray:
+    """Topology-generic bone stream: one gather against a (V,) parent map
+    (``GraphTopology.parents`` / ``plan.arrays["parents"]``).  Roots parent
+    themselves, so their bone vector is zero — identical to
+    :func:`bone_stream` on the NTU-25 map."""
+    return x - jnp.take(x, jnp.asarray(parents, jnp.int32), axis=-2)
 
 
 def two_stream_logits(params_joint, params_bone, x, cfg, plan=None,

@@ -72,11 +72,29 @@ def lm_batches(mcfg: ModelConfig, dcfg: DataConfig) -> Iterator[Dict[str, np.nda
         step += 1
 
 
+def _skeleton_edges(num_joints: int):
+    """The kinematic chain for a clip generator at ``num_joints``: the
+    legacy NTU bone list at 25 joints (byte-compatible with every pinned
+    trace), the matching registry topology's edges at any other
+    registered width, and a plain chain as the last-resort fallback."""
+    if num_joints == 25:
+        return NTU_EDGES
+    from repro.core.agcn.graph import get_topology, topology_names
+
+    for name in topology_names():
+        tp = get_topology(name)
+        if tp.num_joints == num_joints:
+            return tp.edges
+    return [(j + 1, j) for j in range(1, num_joints)]
+
+
 def skeleton_batches(mcfg: ModelConfig, dcfg: DataConfig,
                      num_classes: Optional[int] = None
                      ) -> Iterator[Dict[str, np.ndarray]]:
-    """Synthetic NTU-like clips: class-conditioned joint oscillations on the
-    real 25-joint kinematic chain.  (N*M, T, V, C) + labels."""
+    """Synthetic NTU-like clips: class-conditioned joint oscillations on
+    the skeleton's kinematic chain (the real 25-joint NTU bone list at
+    the default width, the registry topology's bones for other widths).
+    (N*M, T, V, C) + labels."""
     lo, per = _host_slice(dcfg)
     ncls = num_classes or mcfg.gcn_num_classes
     V, T, M, C = (mcfg.gcn_joints, mcfg.gcn_frames, mcfg.gcn_persons,
@@ -85,7 +103,7 @@ def skeleton_batches(mcfg: ModelConfig, dcfg: DataConfig,
     rest = np.zeros((V, 3))
     rng = np.random.default_rng(dcfg.seed)
     offsets = rng.standard_normal((V, 3)) * 0.1
-    for j, p in NTU_EDGES:
+    for j, p in _skeleton_edges(V):
         rest[j - 1] = rest[p - 1] + offsets[j - 1]
     step = 0
     while True:

@@ -81,7 +81,7 @@ def collective_cost_ms(svc, iters: int = 16) -> float:
     from repro.train.steps import make_gcn_slab_step
 
     S = svc.capacity
-    zf = jnp.zeros((S, svc.cfg.gcn_joints, svc.cfg.gcn_in_channels))
+    zf = jnp.zeros((S, svc.vmax, svc.cfg.gcn_in_channels))
     zb = jnp.zeros((S,), bool)
 
     def timed(step, slabs) -> float:

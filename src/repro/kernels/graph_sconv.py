@@ -87,3 +87,67 @@ def graph_sconv_pallas(
         out_shape=jax.ShapeDtypeStruct((R, Vp, Cout), x.dtype),
         interpret=interpret,
     )(x, g, w)
+
+
+def _csr_kernel(x_ref, idx_ref, val_ref, w_ref, out_ref, *, kv: int, deg: int):
+    x = x_ref[...]                                  # (r, Vp, Cin)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for k in range(kv):                             # static subset loop
+        agg = jnp.zeros(x.shape, jnp.float32)
+        for d in range(deg):                        # static ELL-slot loop
+            ids = idx_ref[k, :, d]                  # (Vp,) neighbor of row w
+            vals = val_ref[k, :, d]                 # (Vp,) edge weight (0=pad)
+            agg = agg + jnp.take(x, ids, axis=1) * vals[None, :, None]
+        wk = w_ref[k]                               # (Cin, co)
+        acc += jax.lax.dot_general(
+            agg, wk, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def graph_sconv_csr_pallas(
+    x: jnp.ndarray,        # (R, Vp, Cin)
+    idx: jnp.ndarray,      # (K, Vp, D) int32 ELL neighbor indices
+    val: jnp.ndarray,      # (K, Vp, D) f32 edge weights, zero-padded
+    w: jnp.ndarray,        # (K, Cin, Cout)
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Sparse Σ_k (G_k·x)·W_k over an ELL-packed graph.
+
+    The graph matmul is replaced by D gather-accumulate sweeps (D = max row
+    degree, from ops.pack_csr_ell): each sweep pulls one neighbor per output
+    joint and scales by its edge weight, so compute follows nnz instead of
+    Vp² — the win for the near-empty two-person / hand graphs.  Grid and
+    tiling mirror :func:`graph_sconv_pallas`; idx/val ride whole in VMEM.
+    """
+    R, Vp, Cin = x.shape
+    K, _, Cout = w.shape
+    D = idx.shape[-1]
+    if R % R_TILE == 0:
+        r_tile = R_TILE
+    elif R <= R_TILE:
+        r_tile = R
+    else:
+        raise ValueError(
+            f"row axis R={R} exceeds one tile but is not a multiple of "
+            f"R_TILE={R_TILE}; pad the flattened N*T axis (ops.graph_sconv_csr "
+            f"does this) so the grid divides")
+    co_tile = CO_TILE if Cout % CO_TILE == 0 else Cout
+    grid = (R // r_tile, Cout // co_tile)
+
+    in_spec = pl.BlockSpec((r_tile, Vp, Cin), lambda r, c: (r, 0, 0))
+    idx_spec = pl.BlockSpec((K, Vp, D), lambda r, c: (0, 0, 0))
+    val_spec = pl.BlockSpec((K, Vp, D), lambda r, c: (0, 0, 0))
+    w_spec = pl.BlockSpec((K, Cin, co_tile), lambda r, c: (0, 0, c))
+    out_spec = pl.BlockSpec((r_tile, Vp, co_tile), lambda r, c: (r, 0, c))
+
+    return pl.pallas_call(
+        functools.partial(_csr_kernel, kv=K, deg=D),
+        grid=grid,
+        in_specs=[in_spec, idx_spec, val_spec, w_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Vp, Cout), x.dtype),
+        interpret=interpret,
+    )(x, idx, val, w)

@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.kernels.cavity_tconv import (cavity_tconv_pallas,
                                         cavity_tconv_step_pallas)
-from repro.kernels.graph_sconv import graph_sconv_pallas
+from repro.kernels.graph_sconv import (graph_sconv_csr_pallas,
+                                       graph_sconv_pallas)
 from repro.kernels.rfc_pack import rfc_decode_pallas, rfc_encode_pallas
 
 
@@ -155,20 +156,9 @@ def cavity_tconv_step(
 # Fused graph + spatial conv
 # ---------------------------------------------------------------------------
 
-def graph_sconv(
-    x: jnp.ndarray,          # (N, T, V, Cin) — kept channels already gathered
-    g: jnp.ndarray,          # (K, V, V) or prepadded (K, Vp, Vp) from a plan
-    w: jnp.ndarray,          # (K, Cin, Cout)
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """Fused Σ_k (G_k·x)·W_k.  Returns (N, T, V, Cout).
-
-    Both blocked axes are padded here: joints to the 8-sublane multiple and
-    the flattened N*T row axis to a whole number of row tiles — an odd
-    batch×time product must never reach the kernel as one giant tile (or a
-    non-dividing grid).  ``g`` may arrive already padded to (K, Vp, Vp) from
-    an ExecutionPlan; raw (K, V, V) graphs are padded on the fly.
-    """
+def _pad_rows(x: jnp.ndarray):
+    """Flatten (N, T, V, Cin) to kernel rows: joints sublane-aligned, N*T
+    padded to whole row tiles.  Returns (xr, R, Vp)."""
     from repro.kernels.graph_sconv import R_TILE
 
     N, T, V, Cin = x.shape
@@ -177,11 +167,104 @@ def graph_sconv(
     xr = _pad_to(x.reshape(R, V, Cin), 1, 8)
     # row axis: whole tiles when more than one, else one 8-aligned tile
     xr = _pad_to(xr, 0, R_TILE if R > R_TILE else 8)
+    return xr, R, Vp
+
+
+def graph_sconv(
+    x: jnp.ndarray,          # (N, T, V, Cin) — kept channels already gathered
+    g: jnp.ndarray,          # (K, V, V) or prepadded (K, Vp, Vp) from a plan
+    w: jnp.ndarray,          # (K, Cin, Cout)
+    interpret: bool = True,
+    topology: str = "",
+) -> jnp.ndarray:
+    """Fused Σ_k (G_k·x)·W_k.  Returns (N, T, V, Cout).
+
+    Both blocked axes are padded here: joints to the 8-sublane multiple and
+    the flattened N*T row axis to a whole number of row tiles — an odd
+    batch×time product must never reach the kernel as one giant tile (or a
+    non-dividing grid).  ``g`` may arrive already padded to (K, Vp, Vp) from
+    an ExecutionPlan, or wider still when the plan is padded to a slab Vmax
+    and ``x`` runs at the topology's own joint count (the wider graph is
+    zero outside its valid joints, so slicing to Vp is exact); raw (K, V, V)
+    graphs are padded on the fly.  ``topology`` only decorates the
+    mismatched-shape errors so mixed-slab bugs name the offending skeleton.
+    """
+    N, T, V, Cin = x.shape
+    xr, R, Vp = _pad_rows(x)
+    note = f" for topology {topology!r}" if topology else ""
+    if g.shape[0] != w.shape[0]:
+        raise ValueError(
+            f"graph has K={g.shape[0]} subsets but w has K={w.shape[0]}"
+            f"{note}; the plan packed weights against a different topology")
     if g.shape[-1] == V:
         gp = jnp.zeros((g.shape[0], Vp, Vp), g.dtype).at[:, :V, :V].set(g)
     elif g.shape[-1] == Vp:
         gp = g
+    elif g.shape[-1] > Vp:
+        gp = g[:, :Vp, :Vp]              # plan padded to a wider slab Vmax
     else:
-        raise ValueError(f"graph padded to {g.shape[-1]}, expected {V} or {Vp}")
+        raise ValueError(
+            f"graph{note} padded to {g.shape[-1]}, expected >= {V} "
+            f"(x runs {V} joints, sublane-aligned to {Vp})")
     out = graph_sconv_pallas(xr, gp, w.astype(x.dtype), interpret=interpret)
+    return out[:R, :V, :].reshape(N, T, V, -1)
+
+
+def pack_csr_ell(
+    indptr: np.ndarray,      # (K, V+1) int32
+    indices: np.ndarray,     # (K, E) int32
+    values: np.ndarray,      # (K, E) f32, zero-padded
+    vp: int,                 # padded joint count (multiple of 8)
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR → ELL repack for :func:`graph_sconv_csr_pallas`.
+
+    Each output row gets its neighbor list padded to the max row degree D
+    (idx 0 / val 0 — a harmless gather of joint 0 scaled by zero), and rows
+    are padded to ``vp``.  Returns (idx (K, vp, D) int32, val (K, vp, D)
+    f32)."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    values = np.asarray(values)
+    K, V1 = indptr.shape
+    V = V1 - 1
+    deg = int(max(1, (indptr[:, 1:] - indptr[:, :-1]).max()))
+    idx = np.zeros((K, vp, deg), np.int32)
+    val = np.zeros((K, vp, deg), np.float32)
+    for k in range(K):
+        for r in range(V):
+            lo, hi = int(indptr[k, r]), int(indptr[k, r + 1])
+            idx[k, r, : hi - lo] = indices[k, lo:hi]
+            val[k, r, : hi - lo] = values[k, lo:hi]
+    return idx, val
+
+
+def graph_sconv_csr(
+    x: jnp.ndarray,          # (N, T, V, Cin) — kept channels already gathered
+    idx: jnp.ndarray,        # (K, Vp', D) ELL indices, Vp' >= roundup8(V)
+    val: jnp.ndarray,        # (K, Vp', D) ELL values
+    w: jnp.ndarray,          # (K, Cin, Cout)
+    interpret: bool = True,
+    topology: str = "",
+) -> jnp.ndarray:
+    """Sparse Σ_k (G_k·x)·W_k over an ELL-packed graph.  Returns
+    (N, T, V, Cout).
+
+    Row/joint padding mirrors :func:`graph_sconv`; an ELL pack wider than
+    x's padded joint count (a plan padded to slab Vmax) is sliced down —
+    exact because padded rows are all-zero and indices only reference valid
+    joints."""
+    N, T, V, Cin = x.shape
+    xr, R, Vp = _pad_rows(x)
+    note = f" for topology {topology!r}" if topology else ""
+    if idx.shape[0] != w.shape[0]:
+        raise ValueError(
+            f"ELL graph has K={idx.shape[0]} subsets but w has "
+            f"K={w.shape[0]}{note}")
+    if idx.shape[1] < Vp:
+        raise ValueError(
+            f"ELL graph{note} packed to {idx.shape[1]} joints, expected "
+            f">= {Vp} (x runs {V} joints, sublane-aligned to {Vp})")
+    out = graph_sconv_csr_pallas(
+        xr, idx[:, :Vp], val[:, :Vp].astype(x.dtype), w.astype(x.dtype),
+        interpret=interpret)
     return out[:R, :V, :].reshape(N, T, V, -1)

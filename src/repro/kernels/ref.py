@@ -56,6 +56,29 @@ def graph_sconv_ref(x: jnp.ndarray, g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarr
     return jnp.einsum("krwc,kco->rwo", y, w)
 
 
+def graph_sconv_csr_ref(x, indptr, indices, values, w):
+    """CSR spatial conv: gather-accumulate over indptr/indices per subset.
+
+    x: (R, Vx, Cin) with Vx >= V (extra rows are padding the graph never
+    references), indptr: (K, V+1), indices/values: (K, E) zero-padded,
+    w: (K, Cin, Co).  Returns (R, V, Co).
+    """
+    K, E = indices.shape
+    V = indptr.shape[1] - 1
+    R, _, C = x.shape
+    out = jnp.zeros((R, V, w.shape[-1]), jnp.float32)
+    for k in range(K):
+        # entry e lives on output row w iff indptr[k,w] <= e < indptr[k,w+1];
+        # zero-padded entries map past the last row and are dropped.
+        rows = jnp.searchsorted(indptr[k], jnp.arange(E), side="right") - 1
+        gathered = jnp.take(x, indices[k], axis=1) * values[k][None, :, None]
+        agg = jnp.zeros((R, V, C), x.dtype).at[:, rows, :].add(
+            gathered, mode="drop")
+        out = out + jnp.einsum("rvc,co->rvo", agg, w[k],
+                               preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
 def flash_decode_ref(q, k, v, valid):
     """GQA decode attention oracle.  q: (B,Hkv,G,D), k/v: (B,S,Hkv,D)."""
     D = q.shape[-1]

@@ -183,7 +183,7 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                        capacity_tiers=None, load: str = "poisson",
                        mesh: int = 0, replicas: int = 1,
                        policy: str = "demand", slo_config=None,
-                       trace: str = ""):
+                       trace: str = "", topology: str = ""):
     """Multi-session stream serving through :class:`repro.serving.GcnService`.
 
     One service per backend (two-stream ensemble) under the ``qos`` policy
@@ -207,7 +207,11 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
     controllers on identical traffic.  ``policy="slo"`` swaps the
     demand-driven capacity manager for the :class:`~repro.serving.
     SloController` (grow on measured p99 first-logit regression, shed via
-    admission control at the top tier).  Returns the metrics dicts from
+    admission control at the top tier).  ``topology`` names a registered
+    skeleton (``repro.core.agcn.graph``, e.g. ``ntu50`` / ``hand21``) —
+    the service compiles its plans for that graph and generates matching
+    clips; default is the NTU 25-joint skeleton.  Returns the metrics
+    dicts from
     :func:`repro.serving.run_sessions` / :func:`repro.serving.replay`
     (and the routed runs) and merges them into ``BENCH_sessions.json``."""
     from repro.serving import Trace, replay, run_sessions, write_bench
@@ -215,6 +219,10 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
     cfg = get_config(arch, reduced=reduced)
     assert cfg.family == "gcn", f"{arch} is not a gcn-family arch"
     if trace:
+        if topology:
+            raise ValueError("--topology is not available with --trace: a "
+                             "recorded trace pins its clip bytes to the "
+                             "skeleton it was captured with")
         rec = Trace.load(trace)
         results = [
             replay(cfg, rec, backend=backend, qos=qos, policy=policy,
@@ -236,9 +244,13 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                          seed=seed, qos=qos, preempt_ratio=preempt_ratio,
                          deadline_slack=deadline_slack,
                          capacity_tiers=capacity_tiers, load=load,
-                         mesh=mesh, policy=policy, slo_config=slo_config)
+                         mesh=mesh, policy=policy, slo_config=slo_config,
+                         topology=topology or None)
         results.append(r)
         if replicas > 1:
+            if topology:
+                raise ValueError("--topology is not threaded through the "
+                                 "replica router yet — drop --replicas")
             from repro.distributed.router import run_routed_sessions
             results.append(run_routed_sessions(
                 cfg, replicas=replicas, slots=slots, n_sessions=n,
@@ -409,6 +421,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--replicas", type=int, default=1,
                    help="also serve the load through a ReplicaRouter over "
                         "R service replicas (adds the routed BENCH row)")
+    p.add_argument("--topology", default="",
+                   help="registered skeleton topology to serve (e.g. "
+                        "ntu25, ntu50, hand21, body_hand46) — plans "
+                        "compile for that graph and the generated clips "
+                        "match its joint count (default: ntu25)")
 
     p = sub.add_parser("lm", help="LM families: prefill + decode")
     _add_common(p)
@@ -567,7 +584,8 @@ def main(argv=None):
             load=args.load, mesh=getattr(args, "mesh", 0),
             replicas=getattr(args, "replicas", 1),
             policy=getattr(args, "policy", "demand"), slo_config=slo_config,
-            trace=getattr(args, "trace", ""))
+            trace=getattr(args, "trace", ""),
+            topology=getattr(args, "topology", ""))
         _print_sessions(results)
         return
     if args.mode == "stream":

@@ -136,6 +136,8 @@ class SessionRequest:
     priority: int = 0
     deadline: Optional[int] = None
     degrade: int = 1         # frame-skip stride (1 = every frame)
+    topology: Optional[str] = None      # skeleton name (None = the
+                                        # service's primary topology)
 
     def __post_init__(self):
         self._buf: List[np.ndarray] = []
@@ -715,7 +717,10 @@ class SlabScheduler:
                 # feed effective frame ``rel`` = raw frame ``rel*stride``
                 # (stride 1 = every frame): the device sees a contiguous
                 # decimated stream — no engine change, no hold-mask cost
-                frames[s] = req.frame(slot.rel * stride)
+                f = req.frame(slot.rel * stride)
+                # a narrower-topology frame rides zero-padded to the slab
+                # width (its plan masks the padded joints)
+                frames[s, : f.shape[0]] = f
                 valid[s] = True
                 self.valid_frames += 1
             elif slot.total is None:
@@ -846,7 +851,7 @@ class SlabScheduler:
 
 def bench_key(row: Dict) -> Tuple:
     """Merge key of one ``BENCH_sessions.json`` row: ``(backend, slots,
-    qos, capacity, load, mesh, replicas, policy, trace)``.
+    qos, capacity, load, mesh, replicas, policy, trace, topologies)``.
 
     ``capacity`` distinguishes fixed-capacity runs (``"fixed"``, the
     default for rows written before the elastic axis existed) from elastic
@@ -862,18 +867,21 @@ def bench_key(row: Dict) -> Tuple:
     replayed trace's name/digest, default ``""`` for generated loads)
     are the A/B axes of the trace-replay harness: the same trace under
     ``demand`` vs ``slo`` must land as two comparable rows, not one
-    clobbering the other."""
+    clobbering the other.  ``topologies`` (the served skeleton set,
+    default ``"ntu25"`` for every pre-variable-topology row) keeps an
+    ``--topology ntu50`` run from clobbering its 25-joint baseline."""
     return (row.get("backend"), row.get("slots"), row.get("qos", "fifo"),
             row.get("capacity", "fixed"), row.get("load", "poisson"),
             row.get("mesh", 1), row.get("replicas", 1),
-            row.get("policy", "demand"), row.get("trace", ""))
+            row.get("policy", "demand"), row.get("trace", ""),
+            row.get("topologies", "ntu25"))
 
 
 def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
     """Merge the multi-session serving rows into ``BENCH_sessions.json``.
 
     Rows are keyed by :func:`bench_key` — ``(backend, slots, qos,
-    capacity, load, mesh, replicas, policy, trace)``, with legacy
+    capacity, load, mesh, replicas, policy, trace, topologies)``, with legacy
     defaults (``qos="fifo"``, ``capacity="fixed"``, ``load="poisson"``,
     ``policy="demand"``, …) for rows written before each
     axis existed: an existing row with the same key is replaced in place,

@@ -148,6 +148,27 @@ class GcnService:
       snap_capacity    — snapshot-ring rows (fused path only): live
                          preempted sessions a tick can hold device state
                          for; defaults to ``2 * max(capacity_tiers)``.
+      topologies       — skeleton graphs this service serves (registry
+                         names, see ``repro.core.agcn.graph``).  The first
+                         entry is the *primary* topology (what
+                         ``open_session`` without ``topology=`` gets); the
+                         slab is sized to the widest skeleton (``vmax``
+                         joints) and every topology's ExecutionPlans are
+                         padded to that width, so sessions with different
+                         skeletons share one slab (narrow sessions ride
+                         zero-padded, their plans mask the padded joints).
+                         A mixed tick runs one dispatch per occupied
+                         skeleton group — the primary group (plus all
+                         snapshot/restore events and free slots) first,
+                         then each other group with its own plans and BN
+                         stats, everything outside the group held.
+      sconv            — spatial-conv path selection forwarded to
+                         ``engine.build_execution_plan`` (``auto`` |
+                         ``dense`` | ``csr``); with the default
+                         ``auto``/``csr_eps=0`` the learned dense B_k keeps
+                         every graph dense — today's path.
+      csr_eps          — |G| threshold below which entries are dropped
+                         when measuring density / packing CSR.
       mesh             — optional 1-D ``jax.sharding.Mesh``: the live
                          slab, tier slabs and snapshot rings are placed
                          under it (slot axis sharded across the mesh,
@@ -177,13 +198,16 @@ class GcnService:
                  x_calib: Optional[np.ndarray] = None,
                  warm: bool = True, fused: bool = True,
                  snap_capacity: Optional[int] = None,
+                 topologies: Sequence[str] = ("ntu25",),
+                 sconv: str = "auto", csr_eps: float = 0.0,
                  mesh: Optional[Any] = None,
                  retain_records: int = 1024):
         import jax
         import jax.numpy as jnp
 
         from repro.core.agcn import engine
-        from repro.core.agcn.model import bone_stream
+        from repro.core.agcn.graph import get_topology
+        from repro.core.agcn.model import bone_stream_parents
         from repro.train.steps import make_gcn_fused_tick, make_gcn_slab_step
 
         if qos not in QOS_POLICIES:
@@ -216,33 +240,86 @@ class GcnService:
         self.retain_records = int(retain_records)
         self._jax, self._jnp, self._engine = jax, jnp, engine
 
+        # --- topology registry: one plan set per declared skeleton --------
+        names = tuple(dict.fromkeys(topologies))
+        if not names:
+            raise ValueError("topologies must name at least one skeleton")
+        self._topos = {t: get_topology(t, cfg.gcn_kv) for t in names}
+        self.topologies = names
+        self.primary = names[0]
+        # the slab's joint width: every topology's plans are padded to it
+        self.vmax = max(tp.num_joints for tp in self._topos.values())
+
         # --- plans (joint [+ bone]) and their input-stream transforms -----
+        # one ExecutionPlan tuple per declared topology, each padded to the
+        # service's vmax so all of them step the same slab; ``self.plans``
+        # stays the primary tuple (slab init / router back-compat view)
+        if plans is not None and len(names) > 1:
+            raise ValueError(
+                "prebuilt plans are single-topology — a multi-topology "
+                "service builds its own per-skeleton plans from cfg")
+        self._topo_plans: Dict[str, Tuple] = {}
         if plans is None:
             from repro.core.pruning.plan import plan_from_config
             from repro.models import registry
-            prune_plan = plan_from_config(cfg)
+            # the same PRNG keys for every topology: joint-count-free
+            # parameters (conv stacks, fc head) come out identical, so the
+            # last dispatch of a mixed tick reports every held slot's
+            # logits through the same head its own plan would use
             keys = jax.random.split(jax.random.PRNGKey(seed))
-            plans = tuple(
-                engine.build_execution_plan(
-                    registry.init_params(cfg, k), cfg, prune_plan,
-                    quant=quant, backend=backend)
-                for k in keys)
-        self.plans = tuple(plans)
-        transforms = [lambda x: x, bone_stream][: len(self.plans)]
+            for t in names:
+                topo = self._topos[t]
+                cfg_t = dataclasses.replace(cfg, gcn_joints=topo.num_joints)
+                prune_plan = plan_from_config(cfg_t)
+                self._topo_plans[t] = tuple(
+                    engine.build_execution_plan(
+                        registry.init_params(cfg_t, k), cfg_t, prune_plan,
+                        quant=quant, backend=backend, topology=topo,
+                        pad_joints=self.vmax, sconv=sconv, csr_eps=csr_eps)
+                    for k in keys)
+        else:
+            self._topo_plans[self.primary] = tuple(plans)
+        self.plans = self._topo_plans[self.primary]
+        self.vmax = int(self.plans[0].static.joints)
 
-        # --- frozen BN calibration (plan-level, shared by every tier) -----
-        if bn_stats is None:
-            if x_calib is None:
-                from repro.data.pipeline import DataConfig, skeleton_batches
-                dcfg = DataConfig(global_batch=4, seq_len=cfg.gcn_frames,
-                                  seed=seed)
-                x_calib = jnp.asarray(next(skeleton_batches(cfg, dcfg))["x"])
-            bn_stats = tuple(
-                engine.collect_bn_stats(p, tf(jnp.asarray(x_calib)))
-                for p, tf in zip(self.plans, transforms))
-        elif isinstance(bn_stats, dict):
-            bn_stats = (bn_stats,) * len(self.plans)
-        self.bn_stats = tuple(bn_stats)
+        # --- frozen BN calibration (per topology, shared by every tier) ---
+        # each skeleton calibrates at its own joint count (the padded plan
+        # slices itself to the clip's width), then the stem stats are
+        # padded to the slab width once, so every topology's stats pytree
+        # carries identical leaf shapes into the per-group dispatches
+        if len(names) > 1 and (bn_stats is not None or x_calib is not None):
+            raise ValueError(
+                "bn_stats/x_calib override a single topology's calibration "
+                "— a multi-topology service calibrates each skeleton from "
+                "its own synthetic batch")
+        self._topo_stats: Dict[str, Tuple] = {}
+        for t in names:
+            plans_t = self._topo_plans[t]
+            topo = self._topos[t]
+            transforms = [
+                lambda x: x,
+                lambda x, p=topo.parents: bone_stream_parents(x, p),
+            ][: len(plans_t)]
+            if bn_stats is not None:
+                st = ((bn_stats,) * len(plans_t)
+                      if isinstance(bn_stats, dict) else tuple(bn_stats))
+            else:
+                xc = x_calib
+                if xc is None:
+                    from repro.data.pipeline import (DataConfig,
+                                                     skeleton_batches)
+                    cfg_t = dataclasses.replace(
+                        cfg, gcn_joints=topo.num_joints)
+                    dcfg = DataConfig(global_batch=4, seq_len=cfg.gcn_frames,
+                                      seed=seed)
+                    xc = jnp.asarray(next(skeleton_batches(cfg_t, dcfg))["x"])
+                st = tuple(
+                    engine.collect_bn_stats(p, tf(jnp.asarray(xc)))
+                    for p, tf in zip(plans_t, transforms))
+            self._topo_stats[t] = tuple(
+                engine._pad_data_bn_stats(s, p.static)
+                for s, p in zip(st, plans_t))
+        self.bn_stats = self._topo_stats[self.primary]
 
         # --- one pristine slab per capacity tier --------------------------
         # tier slabs are never mutated in place (every step/restore is a
@@ -297,7 +374,7 @@ class GcnService:
         self.snap_capacity = int(snap_capacity if snap_capacity is not None
                                  else 2 * max(tiers))
         self.sched = SlabScheduler(
-            tiers[0], cfg.gcn_joints, cfg.gcn_in_channels,
+            tiers[0], self.vmax, cfg.gcn_in_channels,
             flush_frames=self.flush_frames,
             first_logit_delay=engine.stream_first_logit_delay(self.plans[0]),
             policy=qos,
@@ -448,7 +525,7 @@ class GcnService:
         retraces within a tier."""
         jnp, jax = self._jnp, self._jax
         engine = self._engine
-        V, C = self.cfg.gcn_joints, self.cfg.gcn_in_channels
+        V, C = self.vmax, self.cfg.gcn_in_channels
         for S, slabs in self._tier_slabs.items():
             zf = jnp.zeros((S, V, C))
             zb = jnp.zeros((S,), bool)
@@ -456,6 +533,12 @@ class GcnService:
             # plain slab step
             _, wl = self._step(self.plans, slabs, zf, zb, zb, zb)
             jax.block_until_ready(wl)
+            # every non-primary skeleton group's dispatch (its own plans +
+            # BN-stats override over the same slab shape)
+            for t in self.topologies[1:]:
+                _, wl = self._step(self._topo_plans[t], slabs, zf, zb, zb,
+                                   zb, stats=self._topo_stats[t])
+                jax.block_until_ready(wl)
             if self.fused:
                 # the fused event tick donates its slab/ring arguments, so
                 # warm it on throwaway copies — never on the pristine tier
@@ -533,7 +616,8 @@ class GcnService:
 
     def open_session(self, *, priority: int = 0,
                      deadline: Optional[int] = None,
-                     arrival: Optional[int] = None) -> SessionHandle:
+                     arrival: Optional[int] = None,
+                     topology: Optional[str] = None) -> SessionHandle:
         """Open a new session and enter it into the admission queue.
 
         The session is *open*: frames arrive via :meth:`submit` and the
@@ -541,18 +625,27 @@ class GcnService:
         buffer is held in place, never zero-padded).  ``priority`` orders
         admission and selects preemption victims; ``deadline`` is the
         absolute completion-deadline tick under ``qos="deadline"``;
-        ``arrival`` backdates the queueing clock (defaults to now).
+        ``arrival`` backdates the queueing clock (defaults to now);
+        ``topology`` declares the session's skeleton (one of the
+        service's ``topologies``; default the primary) — its frames are
+        (V_topo, C) and are served by that topology's plans.
 
         Under ``policy="slo"`` every open passes the controller's
         admission gate first: while shedding, an unprotected open is
         *rejected* (the handle polls as ``"rejected"``; it never enters
         the scheduler and its frames are dropped) or *degraded* (served
         at the configured frame-skip stride) per ``shed_mode``."""
+        topo = topology or self.primary
+        if topo not in self._topos:
+            raise ValueError(
+                f"unknown topology {topo!r} — this service serves "
+                f"{self.topologies}; construct it with topologies=(...) "
+                "to add a skeleton")
         sid = self._next_sid
         self._next_sid += 1
         req = SessionRequest(
             sid=sid, arrival=self._tick if arrival is None else int(arrival),
-            clip=None, priority=priority, deadline=deadline)
+            clip=None, priority=priority, deadline=deadline, topology=topo)
         self._sessions[sid] = req
         if self.slo is not None:
             verdict = self.slo.admit(priority)
@@ -588,11 +681,14 @@ class GcnService:
         if h.sid in self._rejected:
             return
         frame = np.asarray(frame, np.float32)
-        if frame.shape != (self.cfg.gcn_joints, self.cfg.gcn_in_channels):
+        req = self._req(h)
+        t = req.topology or self.primary
+        vt = self._topos[t].num_joints
+        if frame.shape != (vt, self.cfg.gcn_in_channels):
             raise ValueError(
-                f"expected one ({self.cfg.gcn_joints}, "
-                f"{self.cfg.gcn_in_channels}) frame, got {frame.shape}")
-        self._req(h).push_frame(frame)
+                f"expected one ({vt}, {self.cfg.gcn_in_channels}) frame "
+                f"for topology {t!r}, got {frame.shape}")
+        req.push_frame(frame)
 
     def submit_clip(self, h: SessionHandle, clip: np.ndarray) -> None:
         """Submit a whole (T, V, C) clip and close the stream — the batch
@@ -732,6 +828,42 @@ class GcnService:
             self.wall_device_s += time.monotonic() - t0
         return self._last_logits
 
+    def _topology_groups(self) -> List[Tuple[str, np.ndarray]]:
+        """Partition the slot table by session topology: ``[(name, (S,)
+        bool mask), ...]`` with the primary group first (free slots ride
+        the primary — their dead-weight step happens exactly once, where
+        it always did).  Empty non-primary groups are dropped, so a
+        mixed-capable service serving only primary traffic pays no extra
+        dispatch."""
+        S = len(self.sched.slots)
+        masks = {t: np.zeros(S, bool) for t in self.topologies}
+        for s, slot in enumerate(self.sched.slots):
+            t = self.primary
+            if slot is not None and slot.req.topology:
+                t = slot.req.topology
+            masks[t][s] = True
+        out = [(self.primary, masks[self.primary])]
+        out += [(t, masks[t]) for t in self.topologies[1:]
+                if masks[t].any()]
+        return out
+
+    def _step_groups(self, tp, groups, logits):
+        """Step each non-primary skeleton group: one plain dispatch per
+        group with that topology's plans and BN stats over the shared
+        slab, everything outside the group held (held slots keep their
+        state bit-for-bit and report their running prediction).  Returns
+        the last dispatch's logits — it covers the whole slab, because
+        held rows are recomputed from the post-step pool and the fc head
+        is identical across topology plans by construction."""
+        jnp = self._jnp
+        for t, m in groups:
+            self.slabs, logits = self._step(
+                self._topo_plans[t], self.slabs, jnp.asarray(tp.frames),
+                jnp.asarray(tp.valid & m), jnp.asarray(tp.reset & m),
+                jnp.asarray(tp.hold | ~m), stats=self._topo_stats[t])
+            self.device_dispatches += 1
+        return logits
+
     def tick(self) -> List[SessionRecord]:
         """Run one scheduler tick: capacity decision (elastic), QoS policy
         + admissions, snapshot/restore orders, one device dispatch for
@@ -762,9 +894,20 @@ class GcnService:
             queue_age = max(
                 (self._tick - AdmissionQueue._req(it).arrival
                  for it in self.sched.queue), default=0)
+            # the in-flight twin: an admitted-but-unlatched session's
+            # first logit cannot land before admission + pipeline delay,
+            # so its committed latency is already known — without it, a
+            # recovery streak could un-shed while the slab is still full
+            # of sessions guaranteed to breach when they latch
+            inflight_age = max(
+                (slot.admitted + self.sched.first_logit_delay - 1
+                 - slot.req.arrival
+                 for slot in self.sched.slots
+                 if slot is not None and slot.first_logit_tick < 0),
+                default=0)
             target = self.slo.observe(
                 self.sched.busy(), len(self.sched.queue), self._tick,
-                queue_age=queue_age)
+                queue_age=queue_age, inflight_age=inflight_age)
             if target is not None and target != self.capacity:
                 self._migrate(target)
         elif self.capman is not None:
@@ -794,6 +937,19 @@ class GcnService:
                 "shed": self._shed_tick,
             }
             self._shed_tick = []
+        # mixed-skeleton slab: partition the slots by topology.  The
+        # primary group carries the events and the free slots; every
+        # other group is stepped by its own plans afterwards.  Group
+        # masks: valid/reset only inside the group (reset must be
+        # group-masked — step_frames resets *before* the hold select),
+        # hold everything outside it.  None = single-topology service,
+        # which takes exactly the legacy dispatch.
+        groups = (self._topology_groups()
+                  if len(self.topologies) > 1 else None)
+        valid, reset, hold = tp.valid, tp.reset, tp.hold
+        if groups is not None:
+            mp = groups[0][1]
+            valid, reset, hold = valid & mp, reset & mp, hold | ~mp
         if self.fused:
             if tp.snapshot or tp.restore:
                 # event tick — one donated dispatch: snapshot gathers ->
@@ -803,8 +959,8 @@ class GcnService:
                 # re-read the old references.
                 self.slabs, logits, self._rings = self._fused_tick(
                     self.plans, self.slabs, jnp.asarray(tp.frames),
-                    jnp.asarray(tp.valid), jnp.asarray(tp.reset),
-                    jnp.asarray(tp.hold), jnp.asarray(tp.snap_order),
+                    jnp.asarray(valid), jnp.asarray(reset),
+                    jnp.asarray(hold), jnp.asarray(tp.snap_order),
                     jnp.asarray(tp.rest_order), self._rings)
             else:
                 # no-event tick (the common case): the plain slab step is
@@ -813,9 +969,11 @@ class GcnService:
                 # the kernel shape
                 self.slabs, logits = self._step(
                     self.plans, self.slabs, jnp.asarray(tp.frames),
-                    jnp.asarray(tp.valid), jnp.asarray(tp.reset),
-                    jnp.asarray(tp.hold))
+                    jnp.asarray(valid), jnp.asarray(reset),
+                    jnp.asarray(hold))
             self.device_dispatches += 1
+            if groups is not None:
+                logits = self._step_groups(tp, groups[1:], logits)
             self._last_logits = logits           # device array; forced lazily
             # a session finishing this tick needs its logits row now —
             # force the readback (timed as device wait) before drain
@@ -838,9 +996,11 @@ class GcnService:
                 self.device_dispatches += len(self.slabs)
             self.slabs, logits = self._step(
                 self.plans, self.slabs, jnp.asarray(tp.frames),
-                jnp.asarray(tp.valid), jnp.asarray(tp.reset),
-                jnp.asarray(tp.hold))
+                jnp.asarray(valid), jnp.asarray(reset),
+                jnp.asarray(hold))
             self.device_dispatches += 1
+            if groups is not None:
+                logits = self._step_groups(tp, groups[1:], logits)
             self._last_logits = logits
             self._force_logits()                 # legacy: synchronous tick
         done = self.sched.tick_outputs(self._tick, self._last_logits,
@@ -982,6 +1142,10 @@ class GcnService:
         item = package["item"]
         snaps = package["snaps"]
         req = item if isinstance(item, SessionRequest) else item.req
+        if req.topology and req.topology not in self._topos:
+            raise ValueError(
+                f"cannot adopt a {req.topology!r} session — this replica "
+                f"serves {self.topologies}")
         sid = self._next_sid
         self._next_sid += 1
         req.sid = sid
@@ -1075,6 +1239,8 @@ class GcnService:
             "backend": self.backend,
             "slots": self.tiers[0],
             "mesh": self.mesh.size if self.mesh is not None else 1,
+            "topologies": ",".join(self.topologies),
+            "joints": self.vmax,
             "qos": self.qos,
             "policy": self.policy,
             "capacity": ("fixed" if len(self.tiers) == 1 else
@@ -1157,6 +1323,7 @@ def run_sessions(
     mesh: int = 0,
     policy: str = "demand",
     slo_config: Optional[SloConfig] = None,
+    topology: Optional[str] = None,
     rng: Optional[np.random.Generator] = None,
 ) -> Dict:
     """Serve ``n_sessions`` generated skeleton sessions through a
@@ -1179,8 +1346,11 @@ def run_sessions(
     capacity controller (``"demand"`` | ``"slo"``, knobs via
     ``slo_config``); ``rng`` threads an explicit generator into the load
     generators (``default_rng(seed)`` otherwise — numpy's global state is
-    never touched, so concurrent runs can't cross-contaminate).  Returns
-    the :meth:`GcnService.metrics` dict (also the row merged into
+    never touched, so concurrent runs can't cross-contaminate);
+    ``topology`` serves the whole run on a named registry skeleton
+    (``ntu50``, ``hand21``, ...) — clips are generated at that skeleton's
+    joint count (None = the default ``ntu25``).  Returns the
+    :meth:`GcnService.metrics` dict (also the row merged into
     ``BENCH_sessions.json`` by ``serve sessions``)."""
     from repro.data.pipeline import DataConfig, skeleton_batches
 
@@ -1191,13 +1361,20 @@ def run_sessions(
     tiers = tuple(capacity_tiers) if capacity_tiers else (slots,)
     svc = GcnService(cfg, backend=backend, qos=qos, capacity_tiers=tiers,
                      policy=policy, slo_config=slo_config,
+                     topologies=(topology,) if topology else ("ntu25",),
                      quant=quant, seed=seed, fused=fused, mesh=mesh_obj)
 
     if lengths is None:
         lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))
+    # clips are generated at the served skeleton's own joint count (the
+    # scheduler zero-pads them to the slab width at tick time)
+    vt = svc._topos[svc.primary].num_joints
+    cfg_clips = (dataclasses.replace(cfg, gcn_joints=vt)
+                 if vt != cfg.gcn_joints else cfg)
     pool = np.asarray(next(skeleton_batches(
-        cfg, DataConfig(global_batch=n_sessions, seq_len=cfg.gcn_frames,
-                        seed=seed + 1)))["x"])
+        cfg_clips, DataConfig(global_batch=n_sessions,
+                              seq_len=cfg.gcn_frames,
+                              seed=seed + 1)))["x"])
 
     def clip_source(sid: int, T: int) -> np.ndarray:
         return pool[sid % len(pool), :T]
@@ -1207,7 +1384,7 @@ def run_sessions(
     # preempt run: priority admission without preemption
     if load == "burst":
         reqs = bursty_arrivals(
-            n_sessions, lengths, cfg.gcn_joints, cfg.gcn_in_channels,
+            n_sessions, lengths, vt, cfg.gcn_in_channels,
             burst_gap=max(1.0, mean_interarrival / 8.0),
             lull_gap=mean_interarrival * 8.0,
             seed=seed, clip_source=clip_source, priorities=priorities,
@@ -1215,7 +1392,7 @@ def run_sessions(
     elif load == "poisson":
         reqs = poisson_arrivals(
             n_sessions, mean_interarrival, lengths,
-            cfg.gcn_joints, cfg.gcn_in_channels, seed=seed,
+            vt, cfg.gcn_in_channels, seed=seed,
             clip_source=clip_source, priorities=priorities,
             high_priority_ratio=preempt_ratio, rng=rng)
     else:

@@ -176,14 +176,24 @@ class SloController:
                 return _p99(prot)
         return _p99([t for _, t in self._samples])
 
-    def breached(self, queue_age: int = 0) -> bool:
+    def breached(self, queue_age: int = 0, inflight_age: int = 0) -> bool:
         """True when the SLO trend is currently blown: the measured p99
         exceeds the target, or the oldest queued session is already
         *committed* to breaching — it has waited ``queue_age`` ticks and
         cannot latch sooner than ``queue_age + latency_floor``, so
         waiting for the latch would let an unserved queue look healthy
-        for a whole pipeline delay longer."""
+        for a whole pipeline delay longer.
+
+        ``inflight_age`` closes the other half of that blind spot: the
+        worst *committed* first-logit latency among sessions already
+        admitted to a slot but not yet latched (admission tick + pipeline
+        delay − arrival).  Those sessions appear in neither the sample
+        window (no latch yet) nor the queue (already admitted), so
+        without this term a recovery streak could un-shed while the slab
+        is still full of sessions guaranteed to breach when they latch."""
         if queue_age + self.latency_floor > self.config.target_p99_ticks:
+            return True
+        if inflight_age > self.config.target_p99_ticks:
             return True
         p99 = self.measured_p99()
         return p99 is not None and p99 > self.config.target_p99_ticks
@@ -212,19 +222,21 @@ class SloController:
         self.shedding = False
 
     def observe(self, busy: int, queued: int, tick: int,
-                queue_age: int = 0) -> Optional[int]:
+                queue_age: int = 0, inflight_age: int = 0) -> Optional[int]:
         """One tick's control decision → an optional resize target (slots).
 
         Same contract as :meth:`CapacityManager.observe` (call once per
         tick before admissions; the caller executes any returned resize),
         plus ``queue_age`` — the oldest queued session's wait in ticks —
-        as the leading-edge breach signal.  Shedding toggles happen here
-        too: a persistent breach at the top tier turns shedding on, a
-        persistent recovery turns it off (and may shrink)."""
+        and ``inflight_age`` — the worst committed latency among admitted-
+        but-unlatched sessions — as the leading-edge breach signals.
+        Shedding toggles happen here too: a persistent breach at the top
+        tier turns shedding on, a persistent recovery turns it off (and
+        may shrink)."""
         if tick < self._cooldown_until:
             return None
         cfg = self.config
-        if self.breached(queue_age):
+        if self.breached(queue_age, inflight_age):
             self._breach += 1
             self._recover = 0
         else:

@@ -75,6 +75,18 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     return train_step
 
 
+def _gcn_bone_fn(plans) -> Callable:
+    """Bone transform for the ensemble's second stream: the plan's own
+    (V,) parent map when present (any topology — the map rides as a plan
+    leaf, so no retrace), else the fixed NTU-25 :func:`bone_stream`."""
+    from repro.core.agcn.model import bone_stream, bone_stream_parents
+
+    parents = plans[1].arrays.get("parents") if len(plans) > 1 else None
+    if parents is None:
+        return bone_stream
+    return lambda x: bone_stream_parents(x, parents[: x.shape[-2]])
+
+
 def make_gcn_infer_step(cfg: ModelConfig) -> Callable:
     """Batched GCN inference step over prebuilt ExecutionPlans.
 
@@ -85,12 +97,12 @@ def make_gcn_infer_step(cfg: ModelConfig) -> Callable:
     happens inside the step (engine invariant, tested in test_engine.py).
     """
     from repro.core.agcn import engine
-    from repro.core.agcn.model import bone_stream
 
     def infer_step(plans, x):
         logits = engine.execute(plans[0], x)
         if len(plans) > 1:
-            logits = 0.5 * (logits + engine.execute(plans[1], bone_stream(x)))
+            logits = 0.5 * (logits + engine.execute(
+                plans[1], _gcn_bone_fn(plans)(x)))
         return logits
 
     return infer_step
@@ -108,14 +120,14 @@ def make_gcn_stream_step(cfg: ModelConfig) -> Callable:
     per plan pair serves the whole stream, and ``valid=False`` drains the
     per-block latency after the clip ends (engine.stream_flush_frames)."""
     from repro.core.agcn import engine
-    from repro.core.agcn.model import bone_stream
 
     def stream_step(plans, states, frame, valid=True):
         s0, logits = engine.step_frame(plans[0], states[0], frame,
                                        valid=valid)
         if len(plans) > 1:
             s1, lb = engine.step_frame(plans[1], states[1],
-                                       bone_stream(frame), valid=valid)
+                                       _gcn_bone_fn(plans)(frame),
+                                       valid=valid)
             return (s0, s1), 0.5 * (logits + lb)
         return (s0,), logits
 
@@ -134,17 +146,22 @@ def make_gcn_slab_step(cfg: ModelConfig) -> Callable:
     admissions never retrace), and ``hold`` (S,) freezes starved open
     sessions in place (engine.step_frames hold).  Both ensemble streams
     (joint + bone) share the same slot schedule; the host-side
-    admission/eviction logic lives in ``repro.serving``."""
-    from repro.core.agcn import engine
-    from repro.core.agcn.model import bone_stream
+    admission/eviction logic lives in ``repro.serving``.
 
-    def slab_step(plans, slabs, frames, valid, reset, hold=None):
+    ``stats`` (keyword, optional) is a per-stream tuple of frozen BN
+    statistics overriding each slab's own calibration for this tick — the
+    multi-topology service's per-skeleton dispatch; ``None`` keeps the
+    slabs' stats (single-topology path, unchanged)."""
+    from repro.core.agcn import engine
+
+    def slab_step(plans, slabs, frames, valid, reset, hold=None, stats=None):
+        st = stats or (None,) * len(plans)
         s0, logits = engine.step_frames(plans[0], slabs[0], frames, valid,
-                                        reset, hold)
+                                        reset, hold, bn_stats=st[0])
         if len(plans) > 1:
             s1, lb = engine.step_frames(plans[1], slabs[1],
-                                        bone_stream(frames), valid, reset,
-                                        hold)
+                                        _gcn_bone_fn(plans)(frames), valid,
+                                        reset, hold, bn_stats=st[1])
             return (s0, s1), 0.5 * (logits + lb)
         return (s0,), logits
 
@@ -164,19 +181,22 @@ def make_gcn_fused_tick(cfg: ModelConfig) -> Callable:
     are fixed-shape (E, 2) sentinel-padded event buffers shared by both
     ensemble streams (joint + bone ride the same slot schedule).  Jit it
     with ``donate_argnums=(1, 8)`` so the slab and ring pytrees update in
-    place; the caller must never re-read the donated inputs."""
+    place; the caller must never re-read the donated inputs.  ``stats``
+    (keyword — kwargs are never donated) mirrors
+    :func:`make_gcn_slab_step`'s per-stream BN-stats override."""
     from repro.core.agcn import engine
-    from repro.core.agcn.model import bone_stream
 
     def fused_tick(plans, slabs, frames, valid, reset, hold,
-                   snap_order, rest_order, rings):
+                   snap_order, rest_order, rings, stats=None):
+        st = stats or (None,) * len(plans)
         s0, logits, r0 = engine.fused_tick(
             plans[0], slabs[0], frames, valid, reset, hold,
-            snap_order, rest_order, rings[0])
+            snap_order, rest_order, rings[0], bn_stats=st[0])
         if len(plans) > 1:
             s1, lb, r1 = engine.fused_tick(
-                plans[1], slabs[1], bone_stream(frames), valid, reset, hold,
-                snap_order, rest_order, rings[1])
+                plans[1], slabs[1], _gcn_bone_fn(plans)(frames), valid,
+                reset, hold, snap_order, rest_order, rings[1],
+                bn_stats=st[1])
             return (s0, s1), 0.5 * (logits + lb), (r0, r1)
         return (s0,), logits, (r0,)
 

@@ -75,6 +75,21 @@ else
   trap 'rm -rf "$SMOKE_DIR"' EXIT
   python -m benchmarks.run --only kernels --smoke --out-dir "$SMOKE_DIR" > /dev/null
   test -s "$SMOKE_DIR/BENCH_kernels_bench.json"
+  # the sconv_csr axis (dense vs CSR spatial conv at 25/50 joints across a
+  # density sweep) must be emitted by the smoke run and present in the
+  # *tracked* artifact — a regenerated BENCH_kernels_bench.json that loses
+  # the variable-topology rows fails here
+  python - "$SMOKE_DIR/BENCH_kernels_bench.json" <<'EOF'
+import json, sys
+for path in (sys.argv[1], "BENCH_kernels_bench.json"):
+    names = {r["name"] for r in json.load(open(path))}
+    for topo in ("ntu25", "ntu50"):
+        for d in ("d25", "d50"):
+            for impl in ("dense_ref", "csr_ref", "dense_pallas",
+                         "csr_pallas"):
+                want = f"kernels/sconv_csr/{topo}/{d}/{impl}"
+                assert want in names, f"{path} missing {want}"
+EOF
   # one-dispatch tick smoke: the throughput module's tick_fused axis must
   # run the fused serving tick end-to-end (S=4, reference backend) and
   # emit its rows; the tracked BENCH_throughput.json must carry the full

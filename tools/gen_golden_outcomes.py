@@ -37,9 +37,11 @@ DATA_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
 # pipeline's 41-tick first-logit floor, so the smoke burst breaches while
 # its tail is still arriving and the shed path actually fires (the tests
 # assert rejections > 0; a slack bound would let every arrival land
-# before shedding engages)
+# before shedding engages).  recover_patience no longer has to paper over
+# the admitted-but-unlatched blind spot (the controller now sees in-flight
+# committed latencies directly), so it sits at the no-thrash minimum
 GOLDEN_SLO = dict(target_p99_ticks=45, window=16, breach_patience=2,
-                  recover_patience=8, shed_mode="reject")
+                  recover_patience=4, shed_mode="reject")
 GOLDEN_TIERS = (2, 4)
 
 CELLS = [(qos, policy) for qos in ("fifo", "preempt", "deadline")
