@@ -202,6 +202,38 @@ def main():
         # + one restore every tick, the shape where legacy pays 2 extra
         # dispatches + a host sync per tick)
         _tick_fused_axis(ep, backend, cfg, x)
+        # ck_saliency axis: the adaptive-streaming matrix (windowed C_k
+        # graph on/off × saliency frame gating on/off) through the full
+        # GcnService on identical traffic — the C_k graph's marginal tick
+        # cost and the sessions-per-slab win saliency skipping buys
+        _ck_saliency_axis(backend, cfg)
+
+
+def _ck_saliency_axis(backend, cfg):
+    """Emit throughput/measured/ck_saliency rows: 2×2 matrix (ck on/off ×
+    saliency on/off) at S=16 via ``run_sessions`` on identical poisson
+    traffic — frames/s plus effective sessions per slab-slot-tick (the
+    headline saliency gain at equal slab capacity)."""
+    from benchmarks import common
+    from repro.serving import run_sessions
+
+    S = 16
+    n = 8 if common.SMOKE else 32
+    for ck in (0, 1):
+        for sal in (0, 1):
+            out = run_sessions(
+                cfg, slots=S, n_sessions=n, mean_interarrival=2.0,
+                backend=backend, seed=0, use_ck=bool(ck),
+                saliency_thresh=1.05 if sal else 0.0)
+            per_tick = out["wall_s"] * 1e6 / max(out["ticks"], 1)
+            spst = out["sessions"] / (S * max(out["ticks"], 1))
+            emit(f"throughput/measured/ck_saliency/{backend}/S{S}"
+                 f"/ck{ck}/sal{sal}", per_tick,
+                 f"frames_per_s={out['frames_per_s']:.1f} "
+                 f"sessions={out['sessions']} ticks={out['ticks']} "
+                 f"eff_sessions_per_slot_tick={spst:.4f} "
+                 f"skip_rate={out.get('skip_rate', 0.0):.2f} "
+                 f"(interpret CPU)")
 
 
 def _paired(fa, fb, warmup: int = 1, iters: int = 5):

@@ -89,7 +89,7 @@ class ModelConfig:
     gcn_strides: Tuple[int, ...] = ()
     gcn_kv: int = 3                        # K_v neighbour subsets
     gcn_tkernel: int = 9                   # temporal kernel size
-    use_ck: bool = False                   # data-dependent C_k graph (paper drops)
+    use_ck: bool = False                   # windowed data-dependent C_k graph
 
     # --- paper technique knobs (first-class features) ---
     prune_channel_fracs: Tuple[float, ...] = ()  # per-block kept fraction (C1)

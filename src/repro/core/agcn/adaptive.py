@@ -1,0 +1,91 @@
+"""Windowed data-dependent C_k graphs — the adaptive-streaming reformulation.
+
+The paper drops the data-dependent similarity graph C_k at deployment
+(Table I: 88.9% w/o C_k) because eq. (1) pools embeddings over the *whole
+clip's* time axis — a live stream has no clip to pool over.  This module
+reformulates C_k as a **trailing-window** statistic so the same graph is
+computable per frame from the streaming engine's existing ring buffers
+(Continual ST-GCN, PAPERS.md 2203.11009, applies the same per-frame
+continual rewrite to these blocks):
+
+    Θ(t) = Σ_{u=t−K+1..t} θ(x_u)          (zeros before the stream starts)
+    Φ(t) = Σ_{u=t−K+1..t} φ(x_u)
+    C(t) = softmax(Θ(t)·Φ(t)ᵀ / √Ce)      (per output joint, over inputs)
+
+with K = the block's temporal kernel size — the window the block's tconv
+ring already spans, so the streaming state only adds two (S, K, V, Ce)
+embedding rings per C_k block.  Both execution modes use the *same*
+definition: clip mode evaluates the recurrence at every frame index
+(:func:`clip_windowed_ck`), streaming evaluates it incrementally from the
+embedding rings (:func:`windowed_ck` on the ring sums, or the fused pallas
+kernel ``repro.kernels.ops.windowed_similarity``), which is why post-drain
+streaming logits match clip logits ≤1e-3 with C_k **on**
+(tests/test_streaming.py) — the invariant the full-clip eq. (1) could
+never satisfy.
+
+Normalization matches :func:`repro.core.agcn.graph.similarity_graph`
+(logits scaled by 1/√Ce, max-subtracted softmax over the input-joint
+axis); slab-padded joints are masked out of the softmax *columns* so a
+padded plan's graph rows never pool from dead joints.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["windowed_ck", "clip_windowed_ck"]
+
+
+def windowed_ck(win_th: jnp.ndarray, win_ph: jnp.ndarray,
+                valid_joints: int = 0) -> jnp.ndarray:
+    """C = softmax(Θ·Φᵀ/√Ce) from pooled window embeddings.
+
+    ``win_th`` / ``win_ph`` are (..., V, Ce) trailing-window embedding
+    sums (the streaming engine's ``ck_th``/``ck_ph`` rings summed over
+    their K axis; clip mode builds them with
+    :func:`_trailing_window_sum`).  ``valid_joints`` > 0 masks the
+    input-joint *columns* ≥ it to −inf before the softmax — a slab-padded
+    plan's zero rows would otherwise flatten every row's softmax toward
+    the padded joints.  Returns the (..., V, V) normalized graph added to
+    ``A_k + B_k`` per subset."""
+    ce = win_th.shape[-1]
+    logits = jnp.einsum("...ve,...we->...vw", win_th, win_ph) / jnp.sqrt(
+        jnp.asarray(ce, win_th.dtype))
+    V = logits.shape[-1]
+    if 0 < valid_joints < V:
+        dead = jnp.arange(V) >= valid_joints            # (V,) input joints
+        logits = jnp.where(dead, jnp.asarray(-1e30, logits.dtype), logits)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(win_th.dtype)
+
+
+def _trailing_window_sum(e: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-frame trailing-K window sums of (N, T, V, Ce) embeddings:
+    ``out[:, t] = Σ_{d=0..K−1} e[:, t−d]`` with zeros before frame 0 —
+    exactly the streaming embedding ring's content at block clock t
+    (fresh rings are zero-initialized), built as K−1 shifted adds so clip
+    mode never materializes a (T, K) window tensor."""
+    out = e
+    T = e.shape[1]
+    for d in range(1, k):
+        out = out + jnp.pad(e, ((0, 0), (d, 0), (0, 0), (0, 0)))[:, :T]
+    return out
+
+
+def clip_windowed_ck(x: jnp.ndarray, w_theta: jnp.ndarray,
+                     w_phi: jnp.ndarray, k: int,
+                     valid_joints: int = 0) -> jnp.ndarray:
+    """Per-frame windowed C_k for clip mode: (N, T, V, C) -> (N, T, V, V).
+
+    Evaluates the module recurrence at every frame index — embedding
+    projections θ/φ per frame, trailing-K window sums (zeros before the
+    clip starts), then :func:`windowed_ck` — so a clip-mode forward with
+    ``use_ck`` is frame-for-frame the reference twin of the streaming
+    embedding rings (the parity contract in tests/test_streaming.py).
+    ``x`` is the block input with kept channels already gathered;
+    ``w_theta``/``w_phi`` are the plan's (C_kept, Ce) projections."""
+    th = jnp.einsum("ntvc,ce->ntve", x, w_theta.astype(x.dtype))
+    ph = jnp.einsum("ntvc,ce->ntve", x, w_phi.astype(x.dtype))
+    return windowed_ck(_trailing_window_sum(th, k),
+                       _trailing_window_sum(ph, k),
+                       valid_joints=valid_joints)

@@ -42,8 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.core.agcn.graph import (GraphTopology, dense_to_csr, get_topology,
-                                   similarity_graph)
+from repro.core.agcn import adaptive
+from repro.core.agcn.graph import GraphTopology, dense_to_csr, get_topology
 from repro.core.pruning.plan import PrunePlan
 from repro.core.quant import quantize_q88
 from repro.kernels import ops
@@ -198,8 +198,12 @@ class Backend(Protocol):
     name: str
 
     def spatial(self, x: jnp.ndarray, ba: Dict[str, Any],
-                bs: BlockStatic) -> jnp.ndarray:
-        """Graph spatial conv Σ_k (G_k·x)·W_k: (N,T,V,Cin) -> (N,T,V,Cout)."""
+                bs: BlockStatic,
+                ck: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Graph spatial conv Σ_k (G_k·x)·W_k: (N,T,V,Cin) -> (N,T,V,Cout).
+        ``ck`` optionally adds a precomputed per-frame data-dependent
+        graph (N,T,V,V) to every subset's G_k (the windowed C_k path —
+        repro.core.agcn.adaptive)."""
         ...
 
     def temporal(self, x: jnp.ndarray, ba: Dict[str, Any],
@@ -224,21 +228,26 @@ def _gather_in(x: jnp.ndarray, ba: Dict[str, Any]) -> jnp.ndarray:
 
 
 def _spatial_einsum(x: jnp.ndarray, ba: Dict[str, Any],
-                    bs: BlockStatic) -> jnp.ndarray:
+                    bs: BlockStatic,
+                    ck: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Reference math for Σ_k (G_k·x)·W_k (+ optional data-dependent C_k).
 
-    A plan padded to a slab Vmax may be run on a clip at the topology's own
-    joint count (BN calibration); the padded graph is zero outside its
-    valid joints, so slicing it down to x's V is exact."""
+    ``ck`` is a precomputed per-frame (N, T, V, V) windowed similarity
+    graph (repro.core.agcn.adaptive) added to every subset's static
+    ``A_k + B_k`` — the engine computes it (clip: per frame index;
+    streaming: from the embedding rings) because the window state and the
+    padded-joint masking live above the backend.  A plan padded to a slab
+    Vmax may be run on a clip at the topology's own joint count (BN
+    calibration); the padded graph is zero outside its valid joints, so
+    slicing it down to x's V is exact."""
     G = ba["G"].astype(x.dtype)
     if G.shape[-1] != x.shape[2]:
         G = G[:, : x.shape[2], : x.shape[2]]
     Wk = ba["Wk"].astype(x.dtype)
-    if bs.use_ck:
-        Ck = similarity_graph(x, ba["theta"], ba["phi"])
-        Gn = G[None] + Ck[:, None]                    # (N, K, V, V)
-        y = jnp.einsum("ntvc,nkwv->nktwc", x, Gn)
-        return jnp.einsum("nktwc,kco->ntwo", y, Wk)
+    if ck is not None:
+        Gn = G[None, None] + ck.astype(x.dtype)[:, :, None]  # (N,T,K,V,V)
+        y = jnp.einsum("ntvc,ntkwv->ntkwc", x, Gn)
+        return jnp.einsum("ntkwc,kco->ntwo", y, Wk)
     return jnp.einsum("ntvc,kwv,kco->ntwo", x, G, Wk)
 
 
@@ -265,13 +274,14 @@ class ReferenceBackend:
 
     name = "reference"
 
-    def spatial(self, x, ba, bs):
-        """Kept-channel gather + the Σ_k (G_k·x)·W_k einsum (optional C_k),
-        or the CSR gather-accumulate when the plan chose ``sconv="csr"``."""
+    def spatial(self, x, ba, bs, ck=None):
+        """Kept-channel gather + the Σ_k (G_k·x)·W_k einsum (optional
+        windowed C_k via ``ck``), or the CSR gather-accumulate when the
+        plan chose ``sconv="csr"``."""
         xg = _gather_in(x, ba)
         if bs.sconv == "csr" and not bs.use_ck:
             return _spatial_csr_ref(xg, ba, bs)
-        return _spatial_einsum(xg, ba, bs)
+        return _spatial_einsum(xg, ba, bs, ck=ck)
 
     def temporal(self, x, ba, bs):
         """Dense masked temporal conv, 'same' padding, stride on T; pruned
@@ -309,9 +319,12 @@ class ReferenceBackend:
 class PallasBackend:
     """Fused Pallas kernels; RFC roundtrip is the inter-layer format.
 
-    The data-dependent C_k graph cannot be precompiled (it is a function of
-    the activations), so blocks with ``use_ck`` fall back to the reference
-    einsum — matching the paper, which drops C_k at deployment (Table I).
+    The data-dependent C_k graph cannot be precompiled (it is a function
+    of the activations), so blocks with ``use_ck`` apply it through the
+    reference einsum — the graph itself comes precomputed via ``ck``
+    (streaming builds it with the fused ``ops.windowed_similarity``
+    kernel over the embedding rings; with C_k off the paper's
+    deployment path, Table I, is unchanged).
     """
 
     name = "pallas"
@@ -319,13 +332,14 @@ class PallasBackend:
     def __init__(self, interpret: bool = True):
         self.interpret = interpret
 
-    def spatial(self, x, ba, bs):
+    def spatial(self, x, ba, bs, ck=None):
         """Fused graph+1×1 kernel (``ops.graph_sconv``) on the padded
         (K, Vp, Vp) plan graph, or the ELL gather kernel when the plan
-        chose ``sconv="csr"``; C_k blocks fall back to the einsum."""
+        chose ``sconv="csr"``; C_k blocks apply the precomputed ``ck``
+        through the einsum."""
         xg = _gather_in(x, ba)
         if bs.use_ck:
-            return _spatial_einsum(xg, ba, bs)
+            return _spatial_einsum(xg, ba, bs, ck=ck)
         if bs.sconv == "csr":
             return ops.graph_sconv_csr(xg, ba["ell_idx"], ba["ell_val"],
                                        ba["Wk"], interpret=self.interpret)
@@ -646,8 +660,17 @@ def _stem(arrays, x, input_skip: int, bn=_bn_live) -> jnp.ndarray:
     return bn("data_bn", h, p).reshape(N, T, V, C)
 
 
-def _run_block(h, ba, bs, backend: Backend, bn=_bn_live, tag: str = ""):
-    s = backend.spatial(h, ba, bs)
+def _run_block(h, ba, bs, backend: Backend, bn=_bn_live, tag: str = "",
+               vj: int = 0):
+    ck = None
+    if bs.use_ck:
+        # clip-mode windowed C_k: the same trailing-K recurrence the
+        # streaming embedding rings evaluate, per frame index — which is
+        # what makes streaming-vs-clip C_k parity a testable invariant
+        ck = adaptive.clip_windowed_ck(
+            _gather_in(h, ba), ba["theta"], ba["phi"], bs.tkernel,
+            valid_joints=vj if 0 < vj < h.shape[2] else 0)
+    s = backend.spatial(h, ba, bs, ck=ck)
     s = bn(tag + "bn_s", s, ba["bn_s"])
     down = (_proj(h, ba["down_w"], ba["bn_down"], 1, bn, tag + "bn_down")
             if ba["down_w"] is not None else h)
@@ -670,7 +693,7 @@ def block_outputs(plan: ExecutionPlan, x: jnp.ndarray) -> List[jnp.ndarray]:
     nblocks = len(plan.static.blocks)
     for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"],
                                      plan.static.blocks)):
-        h = _run_block(h, ba, bs, backend)
+        h = _run_block(h, ba, bs, backend, vj=plan.static.valid_joints)
         outs.append(h)
         if b < nblocks - 1:
             h = backend.transfer(h, plan.static)
@@ -683,7 +706,8 @@ def _forward(plan: ExecutionPlan, x: jnp.ndarray, bn) -> jnp.ndarray:
     nblocks = len(plan.static.blocks)
     for b, (ba, bs) in enumerate(zip(plan.arrays["blocks"],
                                      plan.static.blocks)):
-        h = _run_block(h, ba, bs, backend, bn, tag=f"b{b}/")
+        h = _run_block(h, ba, bs, backend, bn, tag=f"b{b}/",
+                       vj=plan.static.valid_joints)
         if b < nblocks - 1:
             h = backend.transfer(h, plan.static)
     pooled = h.mean(axis=(1, 2))                       # (N, C_last)
@@ -742,7 +766,11 @@ class StreamState:
     ``blocks[b]``: ring_s (S, K, V, cout) tconv-input ring, ring_h
     (S, K, V, cin) residual-source ring, valid (S, K) clip-validity bits,
     t (S,) int32 inputs seen at this block's time scale (per slot — slots
-    admitted at different times run at different ring phases).  ``t_raw``
+    admitted at different times run at different ring phases); ``use_ck``
+    blocks additionally carry ck_th / ck_ph (S, K, V, Ce) windowed-C_k
+    embedding rings (repro.core.agcn.adaptive) — per-slot leaves like any
+    other, so snapshots, the fused tick's ring, and elastic/cross-replica
+    migration carry them for free.  ``t_raw``
     (S,) counts raw frames per slot; ``pool_*`` hold the per-slot running
     temporal logit pool; ``bn_stats`` the frozen calibration (shared by all
     slots — calibrated once per plan, untouched by slot resets); ``rfc``
@@ -805,11 +833,6 @@ def init_stream_state(
     every slot), so one calibration serves sessions admitted at any later
     time."""
     ps = plan.static
-    if any(bs.use_ck for bs in ps.blocks):
-        raise NotImplementedError(
-            "streaming requires use_ck=False — the data-dependent C_k graph "
-            "pools over the clip's time axis (the paper drops C_k at "
-            "deployment, Table I)")
     if bn_stats is None:
         if x_calib is None:
             raise ValueError(
@@ -820,13 +843,24 @@ def init_stream_state(
     bn_stats = _pad_data_bn_stats(bn_stats, ps)
     K, V = ps.tkernel, ps.joints
     blocks = []
-    for bs in ps.blocks:
-        blocks.append({
+    for b, bs in enumerate(ps.blocks):
+        d = {
             "ring_s": jnp.zeros((batch, K, V, bs.cout), dtype),
             "ring_h": jnp.zeros((batch, K, V, bs.cin), dtype),
             "valid": jnp.zeros((batch, K), bool),
             "t": jnp.zeros((batch,), jnp.int32),
-        })
+        }
+        if bs.use_ck:
+            # windowed-C_k embedding rings (repro.core.agcn.adaptive):
+            # zero rows stand in for the pre-history window frames, so a
+            # fresh slot's first windows match clip mode's leading edge.
+            # Present only on use_ck plans — a C_k-off slab's state tree
+            # (and therefore its snapshots, rings and golden digests) is
+            # unchanged.
+            ce = int(plan.arrays["blocks"][b]["theta"].shape[-1])
+            d["ck_th"] = jnp.zeros((batch, K, V, ce), dtype)
+            d["ck_ph"] = jnp.zeros((batch, K, V, ce), dtype)
+        blocks.append(d)
     c_last = ps.blocks[-1].cout
     rfc = None
     if ps.use_rfc:
@@ -1211,9 +1245,40 @@ def step_frame(
         sb = state.blocks[b]
         tag = f"b{b}/"
         t = sb["t"]                                    # (S,) block clock
+        slot = t % K                                   # (S,) ring phase
+
+        # --- windowed C_k: embedding-ring update + graph (adaptive.py) ----
+        ck = None
+        ck_th = ck_ph = None
+        if bs.use_ck:
+            xg = _gather_in(h_in, ba)
+            e_th = jnp.einsum("nvc,ce->nve", xg,
+                              ba["theta"].astype(h_in.dtype))
+            e_ph = jnp.einsum("nvc,ce->nve", xg,
+                              ba["phi"].astype(h_in.dtype))
+            # invalid (flush) frames write zero embeddings — they trail
+            # every valid frame, so valid windows match clip mode exactly
+            e_th = jnp.where(in_valid[:, None, None], e_th, 0.0)
+            e_ph = jnp.where(in_valid[:, None, None], e_ph, 0.0)
+            ck_th = jnp.where(has_input[:, None, None, None],
+                              sb["ck_th"].at[rows, slot].set(e_th),
+                              sb["ck_th"])
+            ck_ph = jnp.where(has_input[:, None, None, None],
+                              sb["ck_ph"].at[rows, slot].set(e_ph),
+                              sb["ck_ph"])
+            vjs = vj if vmask else 0
+            if ps.backend == "pallas":
+                ck = ops.windowed_similarity(ck_th, ck_ph,
+                                             valid_joints=vjs,
+                                             interpret=ps.interpret)
+            else:
+                ck = adaptive.windowed_ck(ck_th.sum(axis=1),
+                                          ck_ph.sum(axis=1),
+                                          valid_joints=vjs)
 
         # --- frame-local gcn unit (spatial graph conv + down residual) ----
-        s = backend.spatial(h_in[:, None], ba, bs)[:, 0]
+        s = backend.spatial(h_in[:, None], ba, bs,
+                            ck=None if ck is None else ck[:, None])[:, 0]
         s = bn(tag + "bn_s", s, ba["bn_s"])
         down = (bn(tag + "bn_down",
                    jnp.einsum("nvc,co->nvo", h_in, ba["down_w"]),
@@ -1226,7 +1291,6 @@ def step_frame(
         s = jnp.where(in_valid[:, None, None], s, 0.0)
 
         # --- masked per-slot ring write ----------------------------------
-        slot = t % K                                   # (S,) ring phase
         ring_s = jnp.where(has_input[:, None, None, None],
                            sb["ring_s"].at[rows, slot].set(s), sb["ring_s"])
         ring_h = jnp.where(has_input[:, None, None, None],
@@ -1236,8 +1300,12 @@ def step_frame(
                           sb["valid"].at[rows, slot].set(in_valid),
                           sb["valid"])
         t_new = t + has_input.astype(jnp.int32)
-        new_blocks.append({"ring_s": ring_s, "ring_h": ring_h,
-                           "valid": vring, "t": t_new})
+        nb = {"ring_s": ring_s, "ring_h": ring_h,
+              "valid": vring, "t": t_new}
+        if bs.use_ck:
+            nb["ck_th"] = ck_th
+            nb["ck_ph"] = ck_ph
+        new_blocks.append(nb)
 
         # --- stride-decimated emission (per slot) ------------------------
         # output o of the clip conv completes when input t = o*stride + pad

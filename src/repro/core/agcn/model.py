@@ -1,5 +1,6 @@
 """2s-AGCN in JAX (paper §II), with the hybrid pruning plan (C1+C2) applied
-as static channel compaction, optional C_k self-similarity graph, Q8.8
+as static channel compaction, optional windowed C_k self-similarity graph
+(``repro.core.agcn.adaptive`` — streaming/clip parity by construction), Q8.8
 quantization and input-skipping (C5).
 
 Data layout: (N, T, V, C) with the person axis M folded into N (NTU clips are

@@ -19,6 +19,7 @@ from repro.kernels.cavity_tconv import (cavity_tconv_pallas,
 from repro.kernels.graph_sconv import (graph_sconv_csr_pallas,
                                        graph_sconv_pallas)
 from repro.kernels.rfc_pack import rfc_decode_pallas, rfc_encode_pallas
+from repro.kernels.window_sim import windowed_similarity_pallas
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -150,6 +151,32 @@ def cavity_tconv_step(
     flat = out.reshape(B, L * Fg)
     flat = jnp.take(flat, jnp.asarray(inv_perm), axis=-1)
     return flat[:, :num_filters]
+
+
+# ---------------------------------------------------------------------------
+# Windowed similarity (streaming C_k)
+# ---------------------------------------------------------------------------
+
+def windowed_similarity(
+    ring_th: jnp.ndarray,    # (S, K, V, Ce) per-slot θ-embedding ring
+    ring_ph: jnp.ndarray,    # (S, K, V, Ce) per-slot φ-embedding ring
+    valid_joints: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Streaming windowed C_k from the embedding rings.  Returns (S, V, V).
+
+    One fused pass per slab slot: ring window sum → Θ·Φᵀ/√Ce → masked
+    row softmax (input-joint columns ≥ ``valid_joints`` excluded; 0 = all
+    of V live).  The joint axis is sublane-padded here and the padded
+    columns are always masked, so the sliced result equals the reference
+    ``adaptive.windowed_ck(ring.sum(1), ...)`` twin ≤1e-3."""
+    S, K, V, Ce = ring_th.shape
+    th = _pad_to(ring_th, 2, 8)
+    ph = _pad_to(ring_ph, 2, 8)
+    valid = valid_joints if 0 < valid_joints < V else V
+    out = windowed_similarity_pallas(th, ph, valid=int(valid),
+                                     interpret=interpret)
+    return out[:, :V, :V]
 
 
 # ---------------------------------------------------------------------------

@@ -183,7 +183,8 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                        capacity_tiers=None, load: str = "poisson",
                        mesh: int = 0, replicas: int = 1,
                        policy: str = "demand", slo_config=None,
-                       trace: str = "", topology: str = ""):
+                       trace: str = "", topology: str = "",
+                       use_ck: bool = False, saliency_thresh: float = 0.0):
     """Multi-session stream serving through :class:`repro.serving.GcnService`.
 
     One service per backend (two-stream ensemble) under the ``qos`` policy
@@ -210,14 +211,26 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
     admission control at the top tier).  ``topology`` names a registered
     skeleton (``repro.core.agcn.graph``, e.g. ``ntu50`` / ``hand21``) —
     the service compiles its plans for that graph and generates matching
-    clips; default is the NTU 25-joint skeleton.  Returns the metrics
-    dicts from
+    clips; default is the NTU 25-joint skeleton.
+
+    The adaptive-streaming knobs: ``use_ck`` (``--ck``) serves with the
+    windowed data-dependent C_k graph (``repro.core.agcn.adaptive``) and
+    ``saliency_thresh`` (``--saliency-thresh``) > 0 skips uninformative
+    frames per session through a :class:`~repro.serving.saliency.
+    SaliencyGate` — both tag the merged rows (``ck``/``saliency`` axes)
+    only when on, so feature-off rows are byte-identical to before the
+    knobs existed.  Returns the metrics dicts from
     :func:`repro.serving.run_sessions` / :func:`repro.serving.replay`
     (and the routed runs) and merges them into ``BENCH_sessions.json``."""
     from repro.serving import Trace, replay, run_sessions, write_bench
 
+    import dataclasses
+
     cfg = get_config(arch, reduced=reduced)
     assert cfg.family == "gcn", f"{arch} is not a gcn-family arch"
+    if use_ck and not cfg.use_ck:
+        # both paths build plans from cfg, so the flag rides replay too
+        cfg = dataclasses.replace(cfg, use_ck=True)
     if trace:
         if topology:
             raise ValueError("--topology is not available with --trace: a "
@@ -228,7 +241,7 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
             replay(cfg, rec, backend=backend, qos=qos, policy=policy,
                    capacity_tiers=tuple(capacity_tiers or (slots,)),
                    slo_config=slo_config, deadline_slack=deadline_slack,
-                   seed=seed)
+                   seed=seed, saliency_thresh=saliency_thresh)
             for backend in backends
         ]
         write_bench(results)
@@ -245,7 +258,8 @@ def serve_gcn_sessions(arch: str, *, reduced: bool = True, slots: int = 4,
                          deadline_slack=deadline_slack,
                          capacity_tiers=capacity_tiers, load=load,
                          mesh=mesh, policy=policy, slo_config=slo_config,
-                         topology=topology or None)
+                         topology=topology or None, use_ck=use_ck,
+                         saliency_thresh=saliency_thresh)
         results.append(r)
         if replicas > 1:
             if topology:
@@ -426,6 +440,14 @@ def build_parser() -> argparse.ArgumentParser:
                         "ntu25, ntu50, hand21, body_hand46) — plans "
                         "compile for that graph and the generated clips "
                         "match its joint count (default: ntu25)")
+    p.add_argument("--ck", action="store_true",
+                   help="serve with the windowed data-dependent C_k graph "
+                        "(repro.core.agcn.adaptive) folded into every "
+                        "block's spatial conv")
+    p.add_argument("--saliency-thresh", type=float, default=0.0,
+                   help="> 0 skips uninformative frames per session below "
+                        "this attention-ratio threshold "
+                        "(repro.serving.saliency; default 0 = off)")
 
     p = sub.add_parser("lm", help="LM families: prefill + decode")
     _add_common(p)
@@ -490,6 +512,11 @@ def _print_sessions(results) -> None:
         pol = (f" policy=slo trace={r.get('trace', '')}"
                if r.get("policy", "demand") != "demand"
                else (f" trace={r['trace']}" if r.get("trace") else ""))
+        if r.get("ck"):
+            mesh += " ck"
+        if r.get("saliency"):
+            mesh += (f" saliency={r['saliency']} "
+                     f"(skip {r['skip_rate']*100:.0f}%)")
         print(f"backend={r['backend']} [sessions{mesh}{pol} qos={r['qos']}"
               f"{cap} load={r['load']}]: "
               f"{r['sessions']} sessions over {r['slots']} slots, "
@@ -585,7 +612,9 @@ def main(argv=None):
             replicas=getattr(args, "replicas", 1),
             policy=getattr(args, "policy", "demand"), slo_config=slo_config,
             trace=getattr(args, "trace", ""),
-            topology=getattr(args, "topology", ""))
+            topology=getattr(args, "topology", ""),
+            use_ck=getattr(args, "ck", False),
+            saliency_thresh=getattr(args, "saliency_thresh", 0.0))
         _print_sessions(results)
         return
     if args.mode == "stream":

@@ -128,7 +128,13 @@ class SessionRequest:
     under the ``deadline`` policy (None = no deadline).  ``degrade`` is the
     frame-skip stride (1 = full fidelity): a degraded session is served on
     every ``degrade``-th raw frame only — the SLO controller's shed-by-
-    fidelity mode — so it occupies its slot for ~1/stride the ticks."""
+    fidelity mode — so it occupies its slot for ~1/stride the ticks.
+
+    When the scheduler runs a :class:`~repro.serving.saliency.SaliencyGate`
+    the gate attaches ``sal_kept`` (the kept raw-frame indices) and its
+    scorer state to this object — request attributes, so they ride
+    preemption re-queues and cross-replica export/import — and the
+    degrade stride then decimates the *kept* subsequence."""
 
     sid: int
     arrival: int             # tick index at which the session arrives
@@ -166,11 +172,20 @@ class SessionRequest:
             return self._released
         return len(self.clip) if self.clip is not None else len(self._buf)
 
+    def kept_frames(self) -> int:
+        """Frames surviving the saliency gate (``len(sal_kept)`` once a
+        gate has scored this session; all raw frames otherwise).  The
+        count the scheduler's feed clock and service-time budget run on —
+        saliency-skipped frames simply don't exist to the slab."""
+        kept = getattr(self, "sal_kept", None)
+        return len(kept) if kept is not None else self.n_frames()
+
     def eff_frames(self) -> int:
-        """Frames the scheduler will actually feed: ``n_frames`` decimated
-        by the ``degrade`` stride (``ceil(n / degrade)`` — frame 0 is
-        always served, so a non-empty session always feeds at least 1)."""
-        return -(-self.n_frames() // max(1, int(self.degrade)))
+        """Frames the scheduler will actually feed: ``kept_frames``
+        (saliency-gated; raw when no gate) decimated by the ``degrade``
+        stride (``ceil(kept / degrade)`` — frame 0 is always kept and
+        served, so a non-empty session always feeds at least 1)."""
+        return -(-self.kept_frames() // max(1, int(self.degrade)))
 
     def frame(self, i: int) -> np.ndarray:
         """The i-th raw (V, C) frame."""
@@ -204,6 +219,7 @@ class SessionRecord:
     preemptions: int = 0     # times this session was snapshot-evicted
     first_logit_tick: int = -1   # tick of the first valid logit (-1: never)
     degrade: int = 1         # frame-skip stride the session was served at
+    frames_skipped: int = 0  # raw frames the saliency gate dropped
 
 
 def _requests_from_arrivals(
@@ -477,7 +493,8 @@ class SlabScheduler:
                  first_logit_delay: int,
                  policy: str = "fifo",
                  snap_ring: Optional[int] = None,
-                 retain: int = 1024):
+                 retain: int = 1024,
+                 saliency: Optional[Any] = None):
         if policy not in QOS_POLICIES:
             raise ValueError(
                 f"unknown QoS policy {policy!r} (expected one of "
@@ -515,6 +532,13 @@ class SlabScheduler:
         self.valid_frames = 0        # real (clip) frames fed across all slots
         self.preemptions = 0         # snapshot-evictions performed
         self.restores = 0            # preempted sessions re-admitted
+        # optional repro.serving.saliency.SaliencyGate: scores each
+        # occupied slot's unscored frames every tick and the feed clock
+        # serves only the kept subsequence (None = saliency off, the feed
+        # path is byte-identical to the pre-saliency scheduler)
+        self.saliency = saliency
+        self.frames_skipped = 0      # lifetime saliency-dropped frames
+                                     # across *finished* sessions
         # per-tick event budget: the fused tick's order buffers are padded
         # to this static width, and the QoS loops below never schedule more
         # snapshot (or restore) events per tick than it — surplus work
@@ -706,18 +730,30 @@ class SlabScheduler:
                 continue
             slot.held = False
             req = slot.req
+            if self.saliency is not None and slot.total is None:
+                # score any frames that arrived since last tick *before*
+                # the budget/feed math below — the kept list is this
+                # tick's ground truth for both
+                self.saliency.extend(req)
             if slot.total is None and req.is_closed():
                 # service-time budget in *effective* frames: a degraded
-                # session's clip is stride-decimated, so both the clip
-                # phase and the flush drain shrink by ~the stride
+                # session's clip is stride-decimated (of the saliency-kept
+                # subsequence when a gate runs), so both the clip phase
+                # and the flush drain shrink by ~the stride
                 n = req.eff_frames()
                 slot.total = n + self.flush_frames(n)
             stride = max(1, int(req.degrade))
-            if slot.rel * stride < req.n_frames():
-                # feed effective frame ``rel`` = raw frame ``rel*stride``
-                # (stride 1 = every frame): the device sees a contiguous
-                # decimated stream — no engine change, no hold-mask cost
-                f = req.frame(slot.rel * stride)
+            kept = getattr(req, "sal_kept", None)
+            if slot.rel * stride < req.kept_frames():
+                # feed effective frame ``rel`` = kept frame ``rel*stride``
+                # (raw index when no saliency gate; stride 1 = every kept
+                # frame): the device sees a contiguous decimated stream —
+                # no engine change, no hold-mask cost.  An open session
+                # whose fresh frames were all saliency-skipped fails this
+                # bound and is *held* below, exactly like a starved one.
+                raw = (kept[slot.rel * stride] if kept is not None
+                       else slot.rel * stride)
+                f = req.frame(raw)
                 # a narrower-topology frame rides zero-padded to the slab
                 # width (its plan masks the padded joints)
                 frames[s, : f.shape[0]] = f
@@ -824,6 +860,8 @@ class SlabScheduler:
                     self.on_first_logit(slot.req.priority,
                                         tick - slot.req.arrival)
             if slot.total is not None and slot.rel == slot.total - 1:
+                skipped = slot.req.n_frames() - slot.req.kept_frames()
+                self.frames_skipped += skipped
                 rec = SessionRecord(
                     sid=slot.req.sid, frames=slot.req.n_frames(),
                     arrival=slot.req.arrival, admitted=slot.admitted,
@@ -834,7 +872,8 @@ class SlabScheduler:
                     priority=slot.req.priority,
                     preemptions=slot.preemptions,
                     first_logit_tick=slot.first_logit_tick,
-                    degrade=max(1, int(slot.req.degrade)))
+                    degrade=max(1, int(slot.req.degrade)),
+                    frames_skipped=skipped)
                 done.append(rec)
                 self.completed.append(rec)   # bounded deque (maxlen=retain)
                 self.n_completed += 1
@@ -851,7 +890,8 @@ class SlabScheduler:
 
 def bench_key(row: Dict) -> Tuple:
     """Merge key of one ``BENCH_sessions.json`` row: ``(backend, slots,
-    qos, capacity, load, mesh, replicas, policy, trace, topologies)``.
+    qos, capacity, load, mesh, replicas, policy, trace, topologies, ck,
+    saliency)``.
 
     ``capacity`` distinguishes fixed-capacity runs (``"fixed"``, the
     default for rows written before the elastic axis existed) from elastic
@@ -869,21 +909,28 @@ def bench_key(row: Dict) -> Tuple:
     ``demand`` vs ``slo`` must land as two comparable rows, not one
     clobbering the other.  ``topologies`` (the served skeleton set,
     default ``"ntu25"`` for every pre-variable-topology row) keeps an
-    ``--topology ntu50`` run from clobbering its 25-joint baseline."""
+    ``--topology ntu50`` run from clobbering its 25-joint baseline.
+    ``ck`` (windowed C_k graph on, default False) and ``saliency`` (the
+    gate threshold, default 0 = off) are the adaptive-streaming axes —
+    legacy rows predate both features, so the defaults key them as
+    feature-off runs."""
     return (row.get("backend"), row.get("slots"), row.get("qos", "fifo"),
             row.get("capacity", "fixed"), row.get("load", "poisson"),
             row.get("mesh", 1), row.get("replicas", 1),
             row.get("policy", "demand"), row.get("trace", ""),
-            row.get("topologies", "ntu25"))
+            row.get("topologies", "ntu25"),
+            bool(row.get("ck", False)), float(row.get("saliency", 0.0)))
 
 
 def write_bench(results: List[Dict], path: str = DEFAULT_BENCH_PATH) -> None:
     """Merge the multi-session serving rows into ``BENCH_sessions.json``.
 
     Rows are keyed by :func:`bench_key` — ``(backend, slots, qos,
-    capacity, load, mesh, replicas, policy, trace, topologies)``, with legacy
+    capacity, load, mesh, replicas, policy, trace, topologies, ck,
+    saliency)``, with legacy
     defaults (``qos="fifo"``, ``capacity="fixed"``, ``load="poisson"``,
-    ``policy="demand"``, …) for rows written before each
+    ``policy="demand"``, ``ck=False``, ``saliency=0``, …) for rows
+    written before each
     axis existed: an existing row with the same key is replaced in place,
     every other row survives, and new keys are appended — so
     ``serve sessions --backend pallas`` refreshes only the pallas rows

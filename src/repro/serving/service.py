@@ -42,6 +42,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.capacity import CapacityConfig, CapacityManager
+from repro.serving.saliency import SaliencyConfig, SaliencyGate
 from repro.serving.scheduler import (QOS_POLICIES, AdmissionQueue,
                                      SessionRecord, SessionRequest,
                                      SlabScheduler, bursty_arrivals,
@@ -184,6 +185,16 @@ class GcnService:
                          (lifetime totals live in running aggregates),
                          so a service that stays up for days holds
                          constant memory.
+      saliency_thresh  — > 0 runs a
+                         :class:`~repro.serving.saliency.SaliencyGate` at
+                         that attention-ratio threshold: uninformative
+                         frames are skipped per session (the scheduler
+                         feeds only the kept subsequence; starved open
+                         sessions ride the existing hold mask), so the
+                         same slab serves more sessions at bounded
+                         fidelity loss.  0 (default) = off — the feed
+                         path and every metric row are byte-identical to
+                         the pre-saliency service.
     """
 
     def __init__(self, cfg, *, backend: str = "reference", qos: str = "fifo",
@@ -201,7 +212,8 @@ class GcnService:
                  topologies: Sequence[str] = ("ntu25",),
                  sconv: str = "auto", csr_eps: float = 0.0,
                  mesh: Optional[Any] = None,
-                 retain_records: int = 1024):
+                 retain_records: int = 1024,
+                 saliency_thresh: float = 0.0):
         import jax
         import jax.numpy as jnp
 
@@ -373,13 +385,18 @@ class GcnService:
         self.fused = bool(fused)
         self.snap_capacity = int(snap_capacity if snap_capacity is not None
                                  else 2 * max(tiers))
+        self.saliency: Optional[SaliencyGate] = None
+        if saliency_thresh and saliency_thresh > 0.0:
+            self.saliency = SaliencyGate(
+                SaliencyConfig(threshold=float(saliency_thresh)))
         self.sched = SlabScheduler(
             tiers[0], self.vmax, cfg.gcn_in_channels,
             flush_frames=self.flush_frames,
             first_logit_delay=engine.stream_first_logit_delay(self.plans[0]),
             policy=qos,
             snap_ring=self.snap_capacity if self.fused else None,
-            retain=self.retain_records)
+            retain=self.retain_records,
+            saliency=self.saliency)
         # deadline drops retire through the same bounded window as
         # completions, so service-side bookkeeping stays constant under a
         # miss-heavy load too
@@ -660,7 +677,7 @@ class GcnService:
                 self._retire(sid)
                 return SessionHandle(sid=sid)
             if verdict == "degrade":
-                req.degrade = self.slo.config.degrade_stride
+                req.degrade = self.slo.degrade_stride_now()
                 if self.record_outcomes:
                     self._shed_tick.append(
                         {"sid": sid, "mode": "degrade",
@@ -1286,6 +1303,23 @@ class GcnService:
             "records": (recs if keep_records is None
                         else recs[len(recs) - min(keep_records, len(recs)):]),
         }
+        # adaptive-streaming axes ride the row ONLY when enabled, so every
+        # feature-off row (and the tracked legacy BENCH artifacts) stays
+        # byte-identical; bench_key defaults the absent keys to off
+        if getattr(self.cfg, "use_ck", False):
+            out["ck"] = True
+        if self.saliency is not None:
+            gate = self.saliency
+            out["saliency"] = gate.config.threshold
+            out["frames_scored"] = gate.frames_scored
+            out["frames_skipped"] = gate.frames_skipped
+            out["frames_skipped_finished"] = sched.frames_skipped
+            out["skip_rate"] = (gate.frames_skipped / gate.frames_scored
+                                if gate.frames_scored else 0.0)
+            # the headline: sessions one slab-slot-tick buys — a gated run
+            # packs more sessions into the same slab * tick budget
+            out["sessions_per_slot_tick"] = (
+                sched.n_completed / (self.capacity * max(sched.occ_ticks, 1)))
         if self.slo is not None:
             out["slo_target_p99_ticks"] = self.slo.config.target_p99_ticks
             out["shed_mode"] = self.slo.config.shed_mode
@@ -1325,6 +1359,8 @@ def run_sessions(
     slo_config: Optional[SloConfig] = None,
     topology: Optional[str] = None,
     rng: Optional[np.random.Generator] = None,
+    use_ck: bool = False,
+    saliency_thresh: float = 0.0,
 ) -> Dict:
     """Serve ``n_sessions`` generated skeleton sessions through a
     :class:`GcnService` with the two-stream (joint + bone) ensemble.
@@ -1349,8 +1385,12 @@ def run_sessions(
     never touched, so concurrent runs can't cross-contaminate);
     ``topology`` serves the whole run on a named registry skeleton
     (``ntu50``, ``hand21``, ...) — clips are generated at that skeleton's
-    joint count (None = the default ``ntu25``).  Returns the
-    :meth:`GcnService.metrics` dict (also the row merged into
+    joint count (None = the default ``ntu25``).  ``use_ck`` switches the
+    model to the windowed data-dependent C_k graph
+    (``repro.core.agcn.adaptive``) and ``saliency_thresh`` > 0 gates
+    uninformative frames (``repro.serving.saliency``) — the two
+    adaptive-streaming knobs, tagged onto the row only when on.  Returns
+    the :meth:`GcnService.metrics` dict (also the row merged into
     ``BENCH_sessions.json`` by ``serve sessions``)."""
     from repro.data.pipeline import DataConfig, skeleton_batches
 
@@ -1359,10 +1399,13 @@ def run_sessions(
         from repro.distributed.serving import make_batch_mesh
         mesh_obj = make_batch_mesh(mesh)
     tiers = tuple(capacity_tiers) if capacity_tiers else (slots,)
+    if use_ck and not cfg.use_ck:
+        cfg = dataclasses.replace(cfg, use_ck=True)
     svc = GcnService(cfg, backend=backend, qos=qos, capacity_tiers=tiers,
                      policy=policy, slo_config=slo_config,
                      topologies=(topology,) if topology else ("ntu25",),
-                     quant=quant, seed=seed, fused=fused, mesh=mesh_obj)
+                     quant=quant, seed=seed, fused=fused, mesh=mesh_obj,
+                     saliency_thresh=saliency_thresh)
 
     if lengths is None:
         lengths = (cfg.gcn_frames, max(2, cfg.gcn_frames // 2))

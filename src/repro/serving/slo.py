@@ -68,7 +68,15 @@ class SloConfig:
     (``"reject"`` turns them away, ``"degrade"`` serves them at
     ``degrade_stride``-decimated fidelity); ``shrink_margin`` is the
     fraction of the target the measured p99 must sit under before a
-    shrink is considered SLO-safe."""
+    shrink is considered SLO-safe.
+
+    ``degrade_stride_max`` > 0 makes the degrade stride *adapt to breach
+    depth*: each additional ``breach_patience``-long breach streak while
+    already shedding doubles the stride applied to newly degraded opens
+    (``degrade_stride · 2^(depth−1)``, capped at the max), so a deepening
+    overload sheds harder instead of queueing at a fidelity that already
+    proved insufficient.  0 (the default) keeps the legacy fixed
+    stride."""
 
     target_p99_ticks: int = 50
     window: int = 64
@@ -79,6 +87,7 @@ class SloConfig:
     shed_mode: str = "degrade"
     degrade_stride: int = 2
     shrink_margin: float = 0.5
+    degrade_stride_max: int = 0
 
     def __post_init__(self):
         if self.target_p99_ticks < 1:
@@ -92,6 +101,12 @@ class SloConfig:
         if self.degrade_stride < 2:
             raise ValueError("degrade_stride must be >= 2 (1 would make "
                              f"degrade a no-op), got {self.degrade_stride}")
+        if self.degrade_stride_max != 0 and \
+                self.degrade_stride_max < self.degrade_stride:
+            raise ValueError(
+                "degrade_stride_max must be 0 (fixed stride) or >= "
+                f"degrade_stride ({self.degrade_stride}), got "
+                f"{self.degrade_stride_max}")
         if self.cooldown < 3:
             raise ValueError("cooldown must be >= 3 ticks (the no-thrash "
                              "hysteresis guarantee)")
@@ -146,6 +161,11 @@ class SloController:
         self._recover = 0
         self._cooldown_until = -1
         self.shedding = False
+        # breach depth while shedding: 1 when shedding switches on, +1 per
+        # further breach_patience-long streak that fires with shedding
+        # already active, 0 when it switches off — the severity signal
+        # behind degrade_stride_now()
+        self.shed_depth = 0
         self.events: List[ResizeEvent] = []     # committed resizes
         self.shed_rejected = 0                  # opens turned away
         self.shed_degraded = 0                  # opens served at stride
@@ -211,6 +231,20 @@ class SloController:
         self.shed_degraded += 1
         return "degrade"
 
+    def degrade_stride_now(self) -> int:
+        """The frame-skip stride for a session degraded *right now*: the
+        configured ``degrade_stride`` doubled per breach-depth level past
+        the first (``stride · 2^(depth−1)``) and capped at
+        ``degrade_stride_max`` — identical to the fixed stride when the
+        max is 0 (the legacy default) or shedding just switched on.
+        Already-admitted sessions keep the stride they were admitted at;
+        only new degrade verdicts see the deepened stride."""
+        cfg = self.config
+        if cfg.degrade_stride_max <= 0 or self.shed_depth <= 1:
+            return cfg.degrade_stride
+        return min(cfg.degrade_stride_max,
+                   cfg.degrade_stride * (2 ** (self.shed_depth - 1)))
+
     def idle_reset(self) -> None:
         """Forget the latency window and stop shedding — called when the
         service fast-forwards an *idle* gap: every session has drained, so
@@ -220,6 +254,7 @@ class SloController:
         self._samples.clear()
         self._breach = self._recover = 0
         self.shedding = False
+        self.shed_depth = 0
 
     def observe(self, busy: int, queued: int, tick: int,
                 queue_age: int = 0, inflight_age: int = 0) -> Optional[int]:
@@ -249,6 +284,12 @@ class SloController:
             if not self.shedding:
                 self.shedding = True
                 self.shed_windows += 1
+                self.shed_depth = 1
+            else:
+                # breach persisted through another whole patience streak
+                # while already shedding: the overload is deepening —
+                # escalate the degrade stride for newly shed opens
+                self.shed_depth += 1
             return None
         if self._recover >= cfg.recover_patience:
             self._recover = 0
@@ -256,6 +297,7 @@ class SloController:
                 # recover in two steps: stop shedding first, then (next
                 # recovery window) consider shrinking — never both at once
                 self.shedding = False
+                self.shed_depth = 0
                 return None
             p99 = self.measured_p99()
             demand = busy + queued

@@ -349,6 +349,7 @@ def replay(
     max_ticks: int = 100_000,
     plans=None,
     bn_stats=None,
+    saliency_thresh: float = 0.0,
 ) -> Dict:
     """Replay a recorded trace through one :class:`~repro.serving.service.
     GcnService` configuration and return its metrics row.
@@ -370,7 +371,11 @@ def replay(
     policy exists to avoid.  Under ``qos="deadline"``, events without an
     explicit deadline get arrival + minimal service time +
     ``deadline_slack`` (same rule as :func:`~repro.serving.service.
-    run_sessions`)."""
+    run_sessions`).  ``saliency_thresh`` > 0 replays through a
+    :class:`~repro.serving.saliency.SaliencyGate` — the gate is
+    deterministic over the trace's pinned clip bytes, so gated replays
+    golden-lock exactly like ungated ones (tests/data/traces/
+    golden_saliency.json)."""
     from collections import deque
 
     from repro.serving.service import GcnService
@@ -379,7 +384,8 @@ def replay(
                      capacity_tiers=tuple(capacity_tiers), quant=quant,
                      seed=seed, fused=fused, slo_config=slo_config,
                      plans=plans, bn_stats=bn_stats,
-                     record_outcomes=record_outcomes)
+                     record_outcomes=record_outcomes,
+                     saliency_thresh=saliency_thresh)
     reqs = trace_requests(trace, cfg.gcn_joints, cfg.gcn_in_channels)
     if qos == "deadline":
         for r in reqs:

@@ -25,7 +25,13 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     """grad_shardings: optional sharding tree applied to the gradients before
     the optimizer update — lets XLA reduce-scatter the data-parallel grad
     sync straight into the (2D-sharded) moment update instead of
-    all-reducing full gradients (ZeRO-2)."""
+    all-reducing full gradients (ZeRO-2).
+
+    When ``cfg.use_ck`` is set the loss differentiates through the
+    windowed C_k similarity graph (``adaptive.clip_windowed_ck`` in the
+    model forward), so the per-block theta/phi projections train jointly
+    with the conv weights — no separate step is needed for the adaptive
+    graph."""
     loss_fn = make_loss_fn(cfg)
     nmb = max(1, tcfg.microbatches)
 

@@ -110,6 +110,25 @@ for backend in ("reference", "pallas"):
             want = f"throughput/measured/tick_fused/{backend}/S{S}/{path}/fifo"
             assert want in names, f"tracked BENCH_throughput.json missing {want}"
 EOF
+  # adaptive-streaming axis: the smoke run must emit the ck x saliency
+  # grid (S=16, reference) and the tracked artifact must carry it for
+  # both backends — a regenerated BENCH_throughput.json that loses the
+  # adaptive rows fails here
+  python - "$SMOKE_DIR/BENCH_throughput.json" <<'EOF'
+import json, sys
+names = {r["name"] for r in json.load(open(sys.argv[1]))}
+for ck in (0, 1):
+    for sal in (0, 1):
+        want = f"throughput/measured/ck_saliency/reference/S16/ck{ck}/sal{sal}"
+        assert want in names, f"smoke run missing {want}"
+names = {r["name"] for r in json.load(open("BENCH_throughput.json"))}
+for backend in ("reference", "pallas"):
+    for ck in (0, 1):
+        for sal in (0, 1):
+            want = f"throughput/measured/ck_saliency/{backend}/S16/ck{ck}/sal{sal}"
+            assert want in names, \
+                f"tracked BENCH_throughput.json missing {want}"
+EOF
   # distributed tier rides the full tier (a separate interpreter: the
   # fake-device flag only takes effect before jax's backend initialises)
   run_dist

@@ -1,0 +1,266 @@
+"""Temporal-attention saliency gating — the adaptive-streaming skip path.
+
+Three layers of lock:
+
+* **Gate unit contract** (model-free numpy): frame 0 always kept, the
+  consecutive-skip cap bounds information loss, incremental scoring of a
+  growing stream equals batch scoring, and the kept list composes with
+  the SLO degrade stride through ``SessionRequest.eff_frames``.
+* **Replay determinism**: a ``--saliency-thresh`` replay of the checked-in
+  smoke trace reproduces the golden outcome digests + skip counters in
+  ``tests/data/traces/golden_saliency.json`` (regenerate with
+  ``tools/gen_golden_outcomes.py saliency``), on the plain fifo path and
+  through preemption re-queues.
+* **Migration bit-identity**: a gated session preempted into the snapshot
+  ring, exported and resumed on another replica skips exactly the frames
+  it would have skipped in place — logits and skip accounting are
+  bit-identical to the uninterrupted gated run.
+
+The acceptance A/B rides at the bottom: on the bursty+diurnal trace under
+the deadline QoS at equal slab capacity, the gated run serves >= 1.5x the
+sessions of the ungated baseline while holding the high-priority
+first-logit p99 under the SLO target.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.saliency import SaliencyConfig, SaliencyGate
+from repro.serving.scheduler import SessionRequest
+
+CFG = get_config("agcn-2s", reduced=True)
+V, C = CFG.gcn_joints, CFG.gcn_in_channels
+DATA = pathlib.Path(__file__).resolve().parent / "data" / "traces"
+
+GOLDEN = json.loads((DATA / "golden_saliency.json").read_text())
+TIERS = tuple(GOLDEN["tiers"])
+THRESH = GOLDEN["saliency_thresh"]
+
+
+def _req(clip, sid=0):
+    return SessionRequest(sid=sid, arrival=0, clip=clip)
+
+
+# ------------------------------------------------------------ gate unit
+
+def test_saliency_config_validation():
+    with pytest.raises(ValueError):
+        SaliencyConfig(threshold=0.0)
+    with pytest.raises(ValueError):
+        SaliencyConfig(threshold=-1.0)
+    with pytest.raises(ValueError):
+        SaliencyConfig(max_consecutive_skips=0)
+    with pytest.raises(ValueError):
+        SaliencyConfig(eps=0.0)
+    assert SaliencyConfig().max_consecutive_skips == 3
+
+
+def test_gate_keeps_first_frame_and_caps_consecutive_skips():
+    """A frozen pose (zero motion) still samples every cap+1-th frame —
+    the worst-case information-loss bound — and frame 0 always feeds."""
+    clip = np.ones((13, V, C), np.float32)
+    gate = SaliencyGate(SaliencyConfig(threshold=1.0,
+                                       max_consecutive_skips=3))
+    req = _req(clip)
+    gate.extend(req)
+    assert req.sal_kept == [0, 4, 8, 12]
+    assert gate.frames_scored == 13 and gate.frames_skipped == 9
+    assert req.kept_frames() == 4 and req.n_frames() == 13
+
+
+def test_gate_keeps_motion_spikes():
+    """A motion burst scores far above the running mean and is kept both
+    entering and leaving the spike; the surrounding freeze is skipped."""
+    clip = np.zeros((9, V, C), np.float32)
+    clip[5] = 100.0
+    gate = SaliencyGate(SaliencyConfig(threshold=1.0,
+                                       max_consecutive_skips=8))
+    req = _req(clip)
+    gate.extend(req)
+    assert 5 in req.sal_kept and 6 in req.sal_kept
+    assert not {1, 2, 3, 4}.intersection(req.sal_kept)
+
+
+def test_gate_incremental_equals_batch():
+    """Scoring a stream as frames trickle in (extend per tick, the open-
+    session path) yields the same kept list and scorer state as scoring
+    the full clip at once — the idempotence the scheduler relies on."""
+    rng = np.random.default_rng(0)
+    clip = rng.standard_normal((20, V, C)).astype(np.float32)
+    batch = _req(clip)
+    SaliencyGate(SaliencyConfig(threshold=1.05)).extend(batch)
+    inc_gate = SaliencyGate(SaliencyConfig(threshold=1.05))
+    inc = _req(clip[:1].copy())
+    for k in range(1, 21):
+        inc.clip = clip[:k]
+        inc_gate.extend(inc)
+    assert inc.sal_kept == batch.sal_kept
+    assert inc.sal_state.scored == batch.sal_state.scored == 20
+    assert inc.sal_state.mean == pytest.approx(batch.sal_state.mean)
+    assert inc_gate.frames_scored == 20
+
+
+def test_eff_frames_composes_with_degrade():
+    """The scheduler's slot budget is ceil(kept / stride): saliency and
+    the SLO degrade stride decimate multiplicatively, and an ungated
+    request falls back to the raw frame count."""
+    clip = np.ones((13, V, C), np.float32)
+    req = _req(clip)
+    SaliencyGate(SaliencyConfig()).extend(req)
+    assert req.eff_frames() == 4                # kept [0, 4, 8, 12]
+    req.degrade = 2
+    assert req.eff_frames() == 2
+    plain = _req(clip, sid=1)
+    assert plain.eff_frames() == 13 and plain.kept_frames() == 13
+
+
+# -------------------------------------------------------- service layer
+
+jax = pytest.importorskip("jax")
+
+from repro.core.agcn import engine  # noqa: E402
+from repro.core.agcn import model as M  # noqa: E402
+from repro.core.pruning.plan import build_prune_plan  # noqa: E402
+from repro.distributed.router import ReplicaRouter  # noqa: E402
+from repro.serving import (GcnService, Trace, bench_key,  # noqa: E402
+                           outcome_digest, replay, write_bench)
+
+SMOKE = Trace.load(str(DATA / "smoke.json"))
+
+
+@pytest.fixture(scope="module")
+def plans_bn():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    sw = [np.asarray(b["Wk"]) for b in params["blocks"]]
+    pp = build_prune_plan(sw, CFG.gcn_channels, [1.0, 0.5, 0.5, 0.5],
+                         "cav-70-1", input_skip=2)
+    plan = engine.build_execution_plan(params, CFG, pp, quant=True,
+                                       backend="reference")
+    bn = engine.collect_bn_stats(plan, jax.random.normal(
+        jax.random.PRNGKey(1),
+        (2, CFG.gcn_frames, CFG.gcn_joints, CFG.gcn_in_channels)))
+    return (plan,), (bn,)
+
+
+def _replay_gated(plans_bn, qos, thresh=THRESH):
+    plans, bn = plans_bn
+    return replay(CFG, SMOKE, backend="reference", qos=qos, policy="demand",
+                  capacity_tiers=TIERS, slo_config=None, plans=plans,
+                  bn_stats=bn, record_outcomes=True, saliency_thresh=thresh)
+
+
+@pytest.mark.parametrize("qos", [
+    "fifo",
+    pytest.param("preempt", marks=pytest.mark.slow),
+])
+def test_golden_saliency_outcomes(plans_bn, qos):
+    """The gated replay reproduces the checked-in outcome digest and skip
+    counters exactly — saliency decisions are part of the deterministic
+    scheduler contract, including through preemption re-queues."""
+    want = GOLDEN["cells"][f"{qos}/demand"]
+    out = _replay_gated(plans_bn, qos)
+    assert outcome_digest(out["outcomes"]) == want["outcome_digest"]
+    assert out["ticks"] == want["ticks"]
+    assert out["sessions"] == want["sessions"]
+    assert out["frames_scored"] == want["frames_scored"]
+    assert out["frames_skipped"] == want["frames_skipped"]
+    assert out["skip_rate"] == pytest.approx(want["skip_rate"])
+    assert out["saliency"] == THRESH
+    assert want["frames_skipped"] > 0           # the gate actually gated
+
+
+def test_saliency_replay_twice_is_identical(plans_bn):
+    """Two gated replays of the same trace agree tick-for-tick — the
+    determinism half of the adaptive-streaming acceptance."""
+    a = _replay_gated(plans_bn, "fifo")
+    b = _replay_gated(plans_bn, "fifo")
+    assert a["outcomes"] == b["outcomes"]
+    assert a["frames_skipped"] == b["frames_skipped"]
+
+
+def test_gated_session_bit_identical_across_migration(plans_bn):
+    """A gated session preempted into the snapshot ring, exported and
+    resumed on the other replica skips exactly the frames it would have
+    skipped in place: logits and skip accounting are bit-identical to
+    the uninterrupted gated run (the scorer state rides the request)."""
+    plans, bn = plans_bn
+    rng = np.random.default_rng(5)
+    clip_lo = rng.standard_normal((16, V, C)).astype(np.float32)
+    clip_hi = rng.standard_normal((12, V, C)).astype(np.float32)
+
+    def mk():
+        return GcnService(CFG, plans=plans, bn_stats=bn,
+                          capacity_tiers=(1,), qos="preempt",
+                          saliency_thresh=THRESH)
+
+    base_svc = mk()
+    h = base_svc.open_session()
+    base_svc.submit_clip(h, clip_lo)
+    base_svc.run_until_idle()
+    base = base_svc.poll(h)
+    assert base.record.frames_skipped > 0       # the gate engaged
+
+    router = ReplicaRouter([mk(), mk()])
+    h_lo = router.open_session(replica=0, priority=0)
+    router.submit_clip(h_lo, clip_lo)
+    for _ in range(4):
+        router.tick()
+    h_hi = router.open_session(replica=0, priority=1)
+    router.submit_clip(h_hi, clip_hi)
+    router.tick()                       # preempts h_lo into the ring
+    assert router.poll(h_lo).state == "queued"
+    router.migrate_session(h_lo, 1)     # ring row -> host -> replica 1
+    router.run_until_idle()
+    moved = router.poll(h_lo)
+    np.testing.assert_array_equal(moved.logits, base.logits)
+    assert moved.record.frames_skipped == base.record.frames_skipped
+
+
+def test_bench_key_and_merge_default_off(plans_bn, tmp_path):
+    """Legacy rows (no ck/saliency keys) and explicit-off rows share one
+    merge key; a gated row of the same cell lands beside — not over —
+    the ungated one."""
+    legacy = {"backend": "reference", "slots": 4, "qos": "fifo"}
+    assert bench_key(legacy) == bench_key(
+        {**legacy, "ck": False, "saliency": 0.0})
+    assert bench_key(legacy) != bench_key({**legacy, "ck": True})
+    assert bench_key(legacy) != bench_key({**legacy, "saliency": THRESH})
+    base = _replay_gated(plans_bn, "fifo", thresh=0.0)
+    gated = _replay_gated(plans_bn, "fifo")
+    assert "saliency" not in base and "skip_rate" not in base
+    bench = tmp_path / "BENCH_sessions.json"
+    write_bench([base], path=str(bench))
+    write_bench([gated], path=str(bench))       # merge, not clobber
+    write_bench([gated], path=str(bench))       # idempotent re-merge
+    rows = json.loads(bench.read_text())
+    assert len(rows) == 2
+    assert sorted(r.get("saliency", 0.0) for r in rows) == [0.0, THRESH]
+
+
+@pytest.mark.slow
+def test_acceptance_saliency_serves_more_sessions(plans_bn):
+    """THE adaptive-streaming acceptance: on the checked-in
+    bursty+diurnal trace under the deadline QoS at equal slab capacity,
+    the gated run completes >= 1.5x the sessions of the ungated baseline
+    (skipped frames shorten service, so queued sessions still make their
+    deadlines through the bursts) while the high-priority first-logit
+    p99 stays under the SLO target the golden acceptance uses."""
+    big = Trace.load(str(DATA / "bursty_diurnal.json"))
+    plans, bn = plans_bn
+    target = 90
+
+    def run(thresh):
+        return replay(CFG, big, backend="reference", qos="deadline",
+                      policy="demand", capacity_tiers=(4,), slo_config=None,
+                      deadline_slack=40, plans=plans, bn_stats=bn,
+                      saliency_thresh=thresh)
+
+    base, gated = run(0.0), run(1.2)
+    assert gated["sessions"] >= 1.5 * base["sessions"]
+    assert gated["deadline_missed"] < base["deadline_missed"]
+    hp = gated["latency_ms_by_priority"]["1"]
+    assert hp["first_logit_p99_ticks"] <= target
+    assert gated["skip_rate"] > 0.5             # the gate did the work

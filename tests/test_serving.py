@@ -397,7 +397,7 @@ def test_write_bench_elastic_rows_do_not_collide(tmp_path):
     assert rows[1]["capacity"] == "elastic:2,4,8"
     assert "records" not in rows[1]
     assert bench_key(legacy) == ("reference", 2, "fifo", "fixed", "poisson",
-                                 1, 1, "demand", "", "ntu25")
+                                 1, 1, "demand", "", "ntu25", False, 0.0)
     assert bench_key(elastic) != bench_key(fixed_burst) != bench_key(legacy)
     # replace just the elastic row
     write_bench([{**elastic, "frames_per_s": 311.0}], path)

@@ -3,9 +3,10 @@
 A clip fed frame-by-frame through ``engine.step_frame`` (plus the
 ``stream_flush_frames`` drain that materialises each block's 'same'-padding
 latency) must produce the same logits as the batched clip engine, for both
-backends.  Also locks the stride-decimated emission count, the jit-cache
-friendliness of the step (state/plan as pytree args), the sliding-window
-pool, and the calibration/ C_k preconditions.
+backends — with the windowed C_k graph off *and* on (the adaptive-streaming
+subsystem, repro.core.agcn.adaptive).  Also locks the stride-decimated
+emission count, the jit-cache friendliness of the step (state/plan as
+pytree args), the sliding-window pool, and the calibration preconditions.
 """
 import dataclasses
 
@@ -198,12 +199,84 @@ def test_calibration_required(params):
         engine.init_stream_state(plan, N)
 
 
-def test_use_ck_rejected(x):
-    cfg = dataclasses.replace(CFG, use_ck=True)
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    plan = engine.build_execution_plan(params, cfg, backend="reference")
-    with pytest.raises(NotImplementedError, match="use_ck"):
-        engine.init_stream_state(plan, N, x_calib=x)
+# ------------------------------------------------- adaptive windowed C_k
+
+CFG_CK = dataclasses.replace(CFG, use_ck=True)
+
+
+@pytest.fixture(scope="module")
+def ck_params():
+    return M.init_params(CFG_CK, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_streaming_ck_matches_clip_dense(ck_params, x, backend):
+    """The adaptive-streaming lock: with the windowed C_k graph ON, fully
+    drained streaming logits equal clip logits on both backends — the
+    embedding rings evaluate exactly the per-frame trailing-window
+    recurrence clip mode runs (repro.core.agcn.adaptive)."""
+    plan = engine.build_execution_plan(ck_params, CFG_CK, backend=backend)
+    assert any(bs.use_ck for bs in plan.static.blocks)
+    want = engine.execute(plan, x)
+    state, got = _stream(plan, x)
+    assert any("ck_th" in b for b in state.blocks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_streaming_ck_matches_clip_pruned_quant(ck_params, x, prune_plan,
+                                                backend):
+    """C_k parity survives the paper's deployment transforms: kept-channel
+    gathers apply to the θ/φ projections identically in both modes, and
+    quant leaves them untouched (only Wk/tconv weights are Q8.8)."""
+    plan = engine.build_execution_plan(ck_params, CFG_CK, prune_plan,
+                                       quant=True, backend=backend)
+    want = engine.execute(plan, x)
+    _, got = _stream(plan, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ck_changes_logits(params, ck_params, x):
+    """use_ck=True must actually route through the windowed graph — C_k-on
+    and C_k-off logits differ (same weights otherwise)."""
+    on = engine.execute(
+        engine.build_execution_plan(ck_params, CFG_CK, backend="reference"),
+        x)
+    base = {k: v for k, v in ck_params.items()}
+    off = engine.execute(
+        engine.build_execution_plan(base, CFG, backend="reference"), x)
+    assert not np.allclose(np.asarray(on), np.asarray(off), atol=1e-3)
+
+
+def test_ck_state_snapshot_restore_roundtrip(ck_params, x):
+    """The embedding rings are ordinary per-slot leaves: snapshotting a
+    mid-stream C_k slot, trampling it, and restoring resumes bit-identical
+    to the uninterrupted stream."""
+    plan = engine.build_execution_plan(ck_params, CFG_CK,
+                                       backend="reference")
+    state = engine.init_stream_state(plan, N, x_calib=x)
+    step = jax.jit(engine.step_frame)
+    for r in range(6):
+        state, _ = step(plan, state, x[:, r], jnp.asarray(True))
+    snap = engine.snapshot_slots(state, jnp.asarray(0))
+    assert any("ck_th" in b for b in snap["blocks"])
+    # trample slot 0 with foreign frames, then restore
+    trampled = state
+    for r in range(6, 10):
+        trampled, _ = step(plan, trampled, x[:, r] * 3.0, jnp.asarray(True))
+    restored = engine.restore_slots(trampled, jnp.asarray(0), snap)
+    ref = state
+    for r in range(6, 12):
+        ref, ref_logits = step(plan, ref, x[:, r], jnp.asarray(True))
+        restored, got_logits = step(plan, restored, x[:, r],
+                                    jnp.asarray(True))
+    np.testing.assert_array_equal(np.asarray(ref_logits)[0],
+                                  np.asarray(got_logits)[0])
+    for rb, gb in zip(ref.blocks, restored.blocks):
+        np.testing.assert_array_equal(np.asarray(rb["ck_th"])[0],
+                                      np.asarray(gb["ck_th"])[0])
 
 
 def test_flush_frames_formula(params):

@@ -132,7 +132,9 @@ def test_trace_row_carries_merge_axes(plans_bn):
     from repro.serving import bench_key
     k1 = bench_key(out)
     k2 = bench_key(_replay_cell(plans_bn, "fifo", "slo"))
-    assert k1 != k2 and k1[-3:-1] == ("demand", "smoke-v1")
+    assert k1 != k2 and k1[-5:-3] == ("demand", "smoke-v1")
+    # the adaptive-streaming axes default to off for legacy rows
+    assert k1[-2:] == (False, 0.0)
 
 
 @pytest.mark.slow

@@ -286,6 +286,10 @@ def test_slo_config_validation():
         SloConfig(cooldown=2)
     with pytest.raises(ValueError):
         SloConfig(shrink_margin=0.0)
+    with pytest.raises(ValueError):
+        SloConfig(degrade_stride=4, degrade_stride_max=2)
+    assert SloConfig(degrade_stride_max=0).degrade_stride_max == 0
+    assert SloConfig(degrade_stride=2, degrade_stride_max=8) is not None
     assert CONTROL_POLICIES == ("demand", "slo")
     assert SHED_MODES == ("reject", "degrade")
 
@@ -385,6 +389,47 @@ def test_slo_degrade_mode_counts():
     assert c.admit(0) == "degrade"
     assert c.admit(1) == "accept"
     assert c.shed_degraded == 1 and c.shed_rejected == 0
+
+
+def test_slo_degrade_stride_adapts_to_breach_depth():
+    """With ``degrade_stride_max`` set, every further breach_patience-long
+    streak that fires while already shedding doubles the stride handed to
+    newly degraded opens (2 -> 4 -> 8, capped at the max), and a recovery
+    that un-sheds resets it to the configured base."""
+    c = _controller(shed_mode="degrade", degrade_stride=2,
+                    degrade_stride_max=8)
+    c._idx = 1                                  # top tier: breaches shed
+    for _ in range(4):
+        c.record_first_logit(1, 500)            # deep sustained breach
+    t = 0
+    while not c.shedding:
+        c.observe(busy=4, queued=4, tick=t)
+        t += 1
+    assert c.shed_depth == 1
+    assert c.degrade_stride_now() == 2          # first shed: base stride
+    for depth, stride in ((2, 4), (3, 8)):
+        while c.shed_depth < depth:
+            c.observe(busy=4, queued=4, tick=t)
+            t += 1
+        assert c.degrade_stride_now() == stride
+    for _ in range(10):                         # depth keeps rising...
+        c.observe(busy=4, queued=4, tick=t)
+        t += 1
+    assert c.shed_depth > 3
+    assert c.degrade_stride_now() == 8          # ...stride stays capped
+    assert c.admit(0) == "degrade"
+    # recovery un-sheds and zeroes the depth -> base stride again
+    c._samples.clear()
+    for _ in range(8):
+        c.record_first_logit(1, 5)
+    while c.shedding:
+        c.observe(busy=1, queued=0, tick=t)
+        t += 1
+    assert c.shed_depth == 0 and c.degrade_stride_now() == 2
+    # legacy contract: max=0 pins the stride no matter how deep
+    fixed = _controller(shed_mode="degrade", degrade_stride=3)
+    fixed.shed_depth = 7
+    assert fixed.degrade_stride_now() == 3
 
 
 def test_slo_protected_p99_prefers_protected_class():

@@ -44,7 +44,15 @@ def render(path: pathlib.Path) -> str:
                 label += f"/mesh{r['mesh']}"
             if r.get("replicas", 1) > 1:
                 label += f"/x{r['replicas']}"
+            # adaptive-streaming axes: absent on legacy rows (= off)
+            if r.get("ck", False):
+                label += "/+ck"
+            if r.get("saliency", 0):
+                label += f"/sal{r['saliency']}"
             extra = ""
+            if r.get("saliency", 0):
+                extra += (f", skip {r.get('skip_rate', 0)*100:.0f}% "
+                          f"({r.get('frames_skipped', 0)} frames)")
             if r.get("mesh", 1) > 1:
                 extra += (f", collective "
                           f"{r.get('collective_ms_per_tick', 0):.1f}ms/tick")

@@ -12,7 +12,14 @@ Run only when the traces (tools/gen_traces.py) or the scheduler's tick
 semantics *intentionally* change; the golden tests
 (tests/test_traces_golden.py) exist to make unintentional drift loud.
 
+A second lock file, ``golden_saliency.json``, replays the same trace with
+the temporal-attention saliency gate on (``saliency_thresh``) and pins the
+gated outcome digests plus the skip counters — the determinism half of
+the adaptive-streaming acceptance (tests/test_saliency.py).  Pass an
+argument to regenerate just one lock:
+
     JAX_PLATFORMS=cpu PYTHONPATH=src python tools/gen_golden_outcomes.py
+    JAX_PLATFORMS=cpu PYTHONPATH=src python tools/gen_golden_outcomes.py saliency
 """
 import json
 import os
@@ -47,6 +54,11 @@ GOLDEN_TIERS = (2, 4)
 CELLS = [(qos, policy) for qos in ("fifo", "preempt", "deadline")
          for policy in ("demand", "slo")] + [("fifo", "slo-degrade")]
 
+# saliency lock: same trace, gate on — fifo covers the plain feed path,
+# preempt covers saliency state riding snapshot/requeue
+SALIENCY_THRESH = 1.05
+SALIENCY_CELLS = [("fifo", "demand"), ("preempt", "demand")]
+
 
 def build_plans(cfg):
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -61,7 +73,7 @@ def build_plans(cfg):
     return (plan,), (bn,)
 
 
-def cell_row(cfg, trace, plans, bn, qos, policy):
+def cell_row(cfg, trace, plans, bn, qos, policy, saliency_thresh=0.0):
     shed_mode = "degrade" if policy == "slo-degrade" else "reject"
     pol = "slo" if policy.startswith("slo") else "demand"
     out = replay(cfg, trace, backend="reference", qos=qos, policy=pol,
@@ -69,7 +81,8 @@ def cell_row(cfg, trace, plans, bn, qos, policy):
                  slo_config=(SloConfig(**{**GOLDEN_SLO,
                                           "shed_mode": shed_mode})
                              if pol == "slo" else None),
-                 plans=plans, bn_stats=bn, record_outcomes=True)
+                 plans=plans, bn_stats=bn, record_outcomes=True,
+                 saliency_thresh=saliency_thresh)
     row = {
         "outcome_digest": outcome_digest(out["outcomes"]),
         "ticks": out["ticks"],
@@ -90,26 +103,49 @@ def cell_row(cfg, trace, plans, bn, qos, policy):
         row["sessions_rejected"] = out["sessions_rejected"]
         row["sessions_degraded"] = out["sessions_degraded"]
         row["shed_windows"] = out["shed_windows"]
+    if saliency_thresh:
+        row["frames_scored"] = out["frames_scored"]
+        row["frames_skipped"] = out["frames_skipped"]
+        row["skip_rate"] = out["skip_rate"]
     return row
 
 
-def main():
-    cfg = get_config("agcn-2s", reduced=True)
-    trace = Trace.load(os.path.join(DATA_DIR, "smoke.json"))
-    plans, bn = build_plans(cfg)
-    golden = {"trace": trace.name, "trace_digest": trace.digest(),
-              "tiers": list(GOLDEN_TIERS), "slo": GOLDEN_SLO, "cells": {}}
-    for qos, policy in CELLS:
-        row = cell_row(cfg, trace, plans, bn, qos, policy)
-        golden["cells"][f"{qos}/{policy}"] = row
-        print(f"{qos}/{policy}: digest={row['outcome_digest'][:12]} "
-              f"ticks={row['ticks']} sessions={row['sessions']} "
-              f"migrations={row['migrations']}")
-    path = os.path.join(DATA_DIR, "golden_smoke.json")
+def write_lock(golden, name):
+    path = os.path.join(DATA_DIR, name)
     with open(path, "w") as f:
         json.dump(golden, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {path}")
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    cfg = get_config("agcn-2s", reduced=True)
+    trace = Trace.load(os.path.join(DATA_DIR, "smoke.json"))
+    plans, bn = build_plans(cfg)
+    if only in (None, "smoke"):
+        golden = {"trace": trace.name, "trace_digest": trace.digest(),
+                  "tiers": list(GOLDEN_TIERS), "slo": GOLDEN_SLO,
+                  "cells": {}}
+        for qos, policy in CELLS:
+            row = cell_row(cfg, trace, plans, bn, qos, policy)
+            golden["cells"][f"{qos}/{policy}"] = row
+            print(f"{qos}/{policy}: digest={row['outcome_digest'][:12]} "
+                  f"ticks={row['ticks']} sessions={row['sessions']} "
+                  f"migrations={row['migrations']}")
+        write_lock(golden, "golden_smoke.json")
+    if only in (None, "saliency"):
+        golden = {"trace": trace.name, "trace_digest": trace.digest(),
+                  "tiers": list(GOLDEN_TIERS),
+                  "saliency_thresh": SALIENCY_THRESH, "cells": {}}
+        for qos, policy in SALIENCY_CELLS:
+            row = cell_row(cfg, trace, plans, bn, qos, policy,
+                           saliency_thresh=SALIENCY_THRESH)
+            golden["cells"][f"{qos}/{policy}"] = row
+            print(f"saliency {qos}/{policy}: "
+                  f"digest={row['outcome_digest'][:12]} "
+                  f"ticks={row['ticks']} skip_rate={row['skip_rate']:.3f}")
+        write_lock(golden, "golden_saliency.json")
 
 
 if __name__ == "__main__":
